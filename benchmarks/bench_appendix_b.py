@@ -1,0 +1,41 @@
+"""Appendix B negative result: causal masking negates SKI's benefit.
+
+Compares the causal low-rank SKI action (cumulative-sum algorithm of
+Katharopoulos et al., as analysed in the paper's Appendix B) against the
+FD-TNO causal mixer at equal d. The paper's conclusion — the cumsum path
+loses to the FFT path for moderate n — must reproduce on this backend
+(the O(n·r·d) work and (b,n,r,d) intermediate are backend-independent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import report, time_fn
+from repro.core.causal_ski import causal_ski_lowrank
+from repro.core.fd import FDConfig, fd_init, fd_tno_apply
+from repro.core.ski import SKIConfig, ski_init
+from repro.nn.params import unbox
+
+
+def run():
+    d, b, r = 32, 2, 64
+    key = jax.random.PRNGKey(0)
+    for n in (512, 2048):
+        x = jax.random.normal(key, (b, n, d))
+        scfg = SKIConfig(d=d, rank=r, filter_size=16)
+        sparams, _ = unbox(ski_init(key, scfg))
+        t_cumsum = time_fn(
+            jax.jit(lambda p, x: causal_ski_lowrank(p, scfg, x)), sparams, x)
+        fcfg = FDConfig(d=d, causal=True, rpe_layers=3)
+        fparams, _ = unbox(fd_init(key, fcfg))
+        t_fd = time_fn(
+            jax.jit(lambda p, x: fd_tno_apply(p, fcfg, x)), fparams, x)
+        report(f"appendix_b/causal_ski_cumsum_n{n}", t_cumsum * 1e3, "ms")
+        report(f"appendix_b/fd_causal_n{n}", t_fd * 1e3, "ms")
+        report(f"appendix_b/cumsum_slowdown_n{n}", t_cumsum / t_fd, "x",
+               "paper App.B: causal SKI loses -> use FD for causal")
+
+
+if __name__ == "__main__":
+    run()

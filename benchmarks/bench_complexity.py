@@ -1,0 +1,46 @@
+"""Complexity accounting (paper §3.2.1/§3.3): compiled HLO FLOPs of each
+TNO variant vs sequence length — the backend-independent form of the
+paper's O(n log n) → O(n + r log r) claim (single-core CPU wall-clock
+constants do not transfer; TPU wall-clock needs hardware; FLOPs are
+invariant). Expect: SKI FLOPs grow ~linearly in n and sit far below TNO;
+FD ≈ TNO minus the kernel-side FFT and the 2n-1 RPE MLP evaluations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import report
+from repro.core.tno import TNOConfig, tno_apply, tno_init
+from repro.nn.params import unbox
+
+
+def _flops(cfg, n, d=64, b=4):
+    params, _ = unbox(tno_init(jax.random.PRNGKey(0), cfg))
+    x = jax.ShapeDtypeStruct((b, n, d), jnp.float32)
+    pa = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    comp = jax.jit(lambda p, x: tno_apply(p, cfg, x)).lower(pa, x).compile()
+    return float(comp.cost_analysis().get("flops", -1))
+
+
+def run():
+    d = 64
+    flops = {}
+    for n in (2048, 8192, 32768):
+        for variant in ("tno", "ski", "fd"):
+            cfg = TNOConfig(d=d, variant=variant, causal=False, rank=64,
+                            filter_size=32, rpe_layers=3)
+            f = _flops(cfg, n, d=d)
+            flops[(variant, n)] = f
+            report(f"complexity/{variant}_flops_n{n}", f, "flops")
+    for n in (8192, 32768):
+        report(f"complexity/ski_vs_tno_n{n}",
+               flops[("tno", n)] / max(flops[("ski", n)], 1), "x",
+               "paper 3.2.1: SKI's O(n+r log r) < O(n log n)")
+    # linearity: SKI flops at 4x n should be ~4x (not 4x·log-factor)
+    growth = flops[("ski", 32768)] / max(flops[("ski", 8192)], 1)
+    report("complexity/ski_growth_8k_to_32k", growth, "x",
+           "~4 = linear in n")
+
+
+if __name__ == "__main__":
+    run()

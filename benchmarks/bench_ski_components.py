@@ -1,0 +1,52 @@
+"""Paper Figure 11: SKI low-rank-only vs sparse+low-rank cost split.
+
+Times the SKI-TNO with (a) both components, (b) low-rank only, (c) sparse
+only — reproducing the paper's observation that the low-rank path is the
+primary bottleneck but the sparse conv still adds substantial time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import report, time_fn
+from repro.core.ski import SKIConfig, ski_init, ski_tno_apply
+from repro.core import toeplitz
+from repro.kernels import ops
+from repro.nn.params import unbox
+
+
+def run():
+    d, b, n = 64, 4, 2048
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, n, d))
+    cfg = SKIConfig(d=d, rank=64, filter_size=32)
+    params, _ = unbox(ski_init(key, cfg))
+
+    t_both = time_fn(jax.jit(lambda p, x: ski_tno_apply(p, cfg, x)),
+                     params, x)
+
+    from repro.core.ski import inducing_gram_coeffs, make_inducing
+
+    def low_only(p, x):
+        r = cfg.rank
+        idx_lo, w_lo, h = make_inducing(n, r)
+        z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=False)
+        a_coef = inducing_gram_coeffs(p, cfg, r, h)
+        zt = toeplitz.toeplitz_matvec(a_coef[None], jnp.swapaxes(z, 1, 2))
+        return ops.interp_expand(jnp.swapaxes(zt, 1, 2), idx_lo, w_lo,
+                                 use_pallas=False)
+
+    t_low = time_fn(jax.jit(low_only), params, x)
+    t_sparse = time_fn(
+        jax.jit(lambda p, x: ops.short_conv(x, p["filt"], False,
+                                            use_pallas=False)), params, x)
+
+    report("ski_components/both", t_both * 1e3, "ms")
+    report("ski_components/low_rank_only", t_low * 1e3, "ms",
+           "paper Fig11: low rank dominates")
+    report("ski_components/sparse_only", t_sparse * 1e3, "ms",
+           "paper Fig11: conv adds substantial time")
+
+
+if __name__ == "__main__":
+    run()

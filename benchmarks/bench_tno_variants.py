@@ -1,0 +1,59 @@
+"""Paper Figure 1 / §5 speed claims: TNO variant step-time ratios.
+
+Measures the token-mixer forward (+backward) wall time for the baseline
+TNO vs SKI-TNO vs FD-TNO at several sequence lengths, causal and
+bidirectional — the paper's headline claims, as same-host ratios:
+
+* FD-TNO causal faster than TNO causal (paper: 10-15%);
+* FD-TNO bidirectional faster than TNO (one fewer FFT; paper: up to 80%
+  at 6-layer RPE — we use 3-layer, expect smaller but >0 gains);
+* SKI-TNO bidirectional faster than TNO (paper: 25-30% full-model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import report, time_fn
+from repro.core.tno import TNOConfig, tno_apply, tno_init
+from repro.nn.params import unbox
+
+
+def _step_fn(cfg):
+    def loss(params, x):
+        return jnp.sum(tno_apply(params, cfg, x) ** 2)
+    return jax.jit(jax.grad(loss))
+
+
+def run():
+    d, b = 64, 4
+    key = jax.random.PRNGKey(0)
+    for n in (512, 2048):
+        x = jax.random.normal(key, (b, n, d))
+        times = {}
+        for variant in ("tno", "ski", "fd"):
+            for causal in (True, False):
+                if variant == "ski" and causal:
+                    continue            # paper: SKI is bidirectional-only
+                cfg = TNOConfig(d=d, variant=variant, causal=causal,
+                                rank=64, filter_size=32, rpe_layers=3)
+                params, _ = unbox(tno_init(key, cfg))
+                t = time_fn(_step_fn(cfg), params, x)
+                times[(variant, causal)] = t
+                tag = "causal" if causal else "bidir"
+                report(f"tno_variant/{variant}_{tag}_n{n}", t * 1e3, "ms")
+        for causal, tag in ((True, "causal"), (False, "bidir")):
+            base = times[("tno", causal)]
+            fd = times[("fd", causal)]
+            report(f"tno_variant/fd_speedup_{tag}_n{n}",
+                   100.0 * (base - fd) / base, "%",
+                   "paper Fig1: FD faster than TNO")
+        base = times[("tno", False)]
+        skis = times[("ski", False)]
+        report(f"tno_variant/ski_speedup_bidir_n{n}",
+               100.0 * (base - skis) / base, "%",
+               "paper Fig10: SKI faster than TNO (bidir)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: wall-clock timing on CPU with jit warmup.
+
+CPU wall-times are meaningful as *ratios between variants measured on the
+same host* (paper's speedup claims are reproduced as such ratios); absolute
+TPU numbers come from the dry-run roofline instead (EXPERIMENTS §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters=5, warmup=2):
+    """Median wall seconds per call of a jit'd fn (blocks on results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def report(name: str, value, unit: str, derived: str = ""):
+    print(f"{name},{value:.6g},{unit},{derived}")

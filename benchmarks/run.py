@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure. CSV to stdout:
+``name,value,unit,derived-claim``.
+
+  bench_tno_variants        Figure 1 (+par.5.1/5.2 speed ratios)
+  bench_ski_components      Figure 11 (sparse vs low-rank split)
+  bench_appendix_b          Appendix B (causal-SKI negative result)
+  bench_pretrain_parity     Table 1 stand-in (causal quality parity)
+  bench_lra_style           Table 2 stand-in (long-range classification)
+  bench_length_extrapolation Fig 7a + par.3.2.2 (inverse warp / FD grids)
+  bench_decay_classes       Appendix E.3 (smoothness => decay, quantified)
+
+Roofline terms for the production mesh come from the dry-run
+(repro.launch.dryrun / results/*.json), not from this harness.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_appendix_b, bench_complexity,
+                            bench_decay_classes, bench_length_extrapolation,
+                            bench_lra_style, bench_pretrain_parity,
+                            bench_ski_components, bench_tno_variants)
+    print("name,value,unit,derived")
+    modules = [
+        ("complexity", bench_complexity),
+        ("tno_variants", bench_tno_variants),
+        ("ski_components", bench_ski_components),
+        ("appendix_b", bench_appendix_b),
+        ("pretrain_parity", bench_pretrain_parity),
+        ("lra_style", bench_lra_style),
+        ("length_extrapolation", bench_length_extrapolation),
+        ("decay_classes", bench_decay_classes),
+    ]
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception as e:              # report, keep the harness alive
+            print(f"{name}/ERROR,0,,{e!r}", file=sys.stderr)
+            print(f"{name}/ERROR,0,error,{type(e).__name__}")
+        print(f"{name}/_elapsed,{time.time() - t0:.1f},s,")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end driver: pre-train a TNN-family causal LM (~100M-param config,
+reduced to CPU scale by default) for a few hundred steps on the synthetic
+corpus, with checkpoints and fault-tolerant runtime — the paper's §5.1
+pipeline shape, through the framework's full stack.
+
+CPU-scale run (a few minutes):
+  PYTHONPATH=src python examples/train_tnn_lm.py --variant fd --steps 200
+
+Full-size config (TPU fleet; same entrypoint):
+  PYTHONPATH=src python -m repro.launch.train --arch fd-tnn-lm-wt103 \
+      --steps 50000 --production-mesh
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import StepBuilder
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="fd", choices=["tno", "ski", "fd"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full-size", action="store_true",
+                    help="paper-scale 6L/512d (~45M) instead of smoke")
+    ap.add_argument("--ckpt-dir", default="/tmp/tnn_lm_ckpt")
+    args = ap.parse_args()
+
+    name = {"tno": "tnn-lm-wt103", "ski": "ski-tnn-lm-wt103",
+            "fd": "fd-tnn-lm-wt103"}[args.variant]
+    cfg = get_config(name)
+    if not args.full_size:
+        cfg = reduce_for_smoke(cfg, d_model=128, vocab=1024, n_layers=2)
+    cfg = dataclasses.replace(cfg, scan_layers=True)
+
+    mesh = make_host_mesh()
+    opt_cfg = adamw.OptConfig(lr=1e-3, warmup_steps=20,
+                              total_steps=args.steps)
+    sb = StepBuilder(cfg, mesh, opt_cfg=opt_cfg)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                          global_batch=args.batch, kind="synthetic")
+
+    state_sh = sb.state_shardings()
+    train_step = jax.jit(sb.make_train_step(),
+                         in_shardings=(state_sh, None),
+                         out_shardings=(state_sh, None))
+
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=100, log_every=25)
+    trainer = Trainer(tcfg, train_step, data_cfg)
+    with mesh:
+        state = jax.device_put(sb.init_state(jax.random.PRNGKey(0)), state_sh)
+        state, start = trainer.try_restore(state, shardings=state_sh)
+        state, end = trainer.run(state, start)
+
+    nlls = [float(m["nll"]) for m in trainer.metrics_history]
+    print(f"[example] {args.variant}: nll {nlls[0]:.3f} -> {nlls[-1]:.3f} "
+          f"(ppl {np.exp(nlls[-1]):.1f}) over {end - start} steps")
+    assert nlls[-1] < nlls[0], "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

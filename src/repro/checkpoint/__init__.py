@@ -1,0 +1,2 @@
+from repro.checkpoint.manifest import (AsyncCheckpointer, latest_step,
+                                       restore, save)

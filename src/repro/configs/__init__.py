@@ -1,0 +1,1 @@
+from repro.configs.base import get_config, list_archs, reduce_for_smoke

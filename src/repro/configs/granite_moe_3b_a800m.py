@@ -1,0 +1,13 @@
+"""Granite-3.0-3b-a800m [hf:ibm-granite]: 40 experts top-8, d_ff=512."""
+from repro.configs.base import register
+from repro.models.config import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49155,
+    pattern=(("attention", "moe"),),
+    n_experts=40, top_k=8,
+    dtype="bfloat16", param_dtype="bfloat16", remat="full",
+    notes="pure full attention; long_500k SKIPPED; vocab padded to /256",
+))

@@ -1,0 +1,15 @@
+"""PaliGemma-3B [arXiv:2407.07726]: SigLIP patch frontend (STUB per the
+assignment: input_specs provides precomputed patch embeddings) + gemma text
+tower as a prefix-LM (bidirectional over 256 patches, causal over text)."""
+from repro.configs.base import register
+from repro.models.config import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="paligemma-3b",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab=257216,
+    pattern=(("attention", "dense"),),
+    kind="prefix_vlm", n_prefix=256,
+    dtype="bfloat16", param_dtype="bfloat16", remat="full",
+    notes="pure full attention; long_500k SKIPPED; MQA (kv=1)",
+))

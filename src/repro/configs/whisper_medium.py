@@ -1,0 +1,15 @@
+"""Whisper-medium [arXiv:2212.04356]: enc-dec; conv audio frontend is a
+STUB (input_specs provides precomputed frame embeddings). SwiGLU FFN in
+place of the original 2-proj MLP (framework default; ~+30% FFN params)."""
+from repro.configs.base import register
+from repro.models.config import ArchConfig
+
+CONFIG = register(ArchConfig(
+    name="whisper-medium",
+    n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    head_dim=64, d_ff=4096, vocab=51865,
+    pattern=(("attention", "dense"),),
+    kind="encdec",
+    dtype="bfloat16", param_dtype="bfloat16", remat="full",
+    notes="enc-dec; decode shapes RUN (decoder side); long_500k SKIPPED",
+))

@@ -1,0 +1,73 @@
+"""TNN sequence-modeling block (paper Fig. 3): GTU (token+channel mix via
+TNO) followed by GLU (channel mix), pre-norm residual."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tno import TNOConfig, tno_apply, tno_init
+from repro.nn.layers import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.nn.params import KeyGen
+
+
+@dataclasses.dataclass(frozen=True)
+class TNNBlockConfig:
+    d_model: int
+    tno: TNOConfig = None          # type: ignore[assignment]
+    expand: int = 1                # GTU expansion
+    glu_expand: int = 1            # GLU hidden expansion
+    act: str = "silu"
+
+
+def gtu_init(key, cfg: TNNBlockConfig):
+    kg = KeyGen(key)
+    de = cfg.d_model * cfg.expand
+    return {
+        "wu": dense_init(kg(), cfg.d_model, de, axes=("embed", "tno_channel")),
+        "wv": dense_init(kg(), cfg.d_model, de, axes=("embed", "tno_channel")),
+        "wo": dense_init(kg(), de, cfg.d_model, axes=("tno_channel", "embed")),
+        "tno": tno_init(kg(), cfg.tno),
+    }
+
+
+def gtu_apply(params, cfg: TNNBlockConfig, x: jax.Array) -> jax.Array:
+    from repro.nn.layers import ACTS
+    act = ACTS[cfg.act]
+    u = act(dense(params["wu"], x))
+    v = act(dense(params["wv"], x))
+    o = tno_apply(params["tno"], cfg.tno, u) * v
+    return dense(params["wo"], o)
+
+
+def glu_init(key, cfg: TNNBlockConfig):
+    kg = KeyGen(key)
+    dh = cfg.d_model * cfg.glu_expand
+    return {
+        "w1": dense_init(kg(), cfg.d_model, dh, axes=("embed", "mlp")),
+        "w2": dense_init(kg(), cfg.d_model, dh, axes=("embed", "mlp")),
+        "w3": dense_init(kg(), dh, cfg.d_model, axes=("mlp", "embed")),
+    }
+
+
+def glu_apply(params, cfg: TNNBlockConfig, x: jax.Array) -> jax.Array:
+    from repro.nn.layers import ACTS
+    act = ACTS[cfg.act]
+    return dense(params["w3"], act(dense(params["w1"], x)) * dense(params["w2"], x))
+
+
+def tnn_block_init(key, cfg: TNNBlockConfig):
+    kg = KeyGen(key)
+    return {
+        "norm1": rmsnorm_init(kg(), cfg.d_model),
+        "gtu": gtu_init(kg(), cfg),
+        "norm2": rmsnorm_init(kg(), cfg.d_model),
+        "glu": glu_init(kg(), cfg),
+    }
+
+
+def tnn_block_apply(params, cfg: TNNBlockConfig, x: jax.Array) -> jax.Array:
+    x = x + gtu_apply(params["gtu"], cfg, rmsnorm(params["norm1"], x))
+    x = x + glu_apply(params["glu"], cfg, rmsnorm(params["norm2"], x))
+    return x

@@ -1,0 +1,86 @@
+"""Frequency-domain TNO (paper §3.3, Algorithm 2).
+
+Causal: the RPE MLP models the *real part* of the kernel's DTFT sampled at
+ω_m = mπ/n (m = 0..n, the rfft grid of a length-2n signal); the imaginary
+part comes from the discrete Hilbert transform, making the time-domain
+kernel exactly causal. No explicit decay bias: the activation's smoothness
+fixes the decay class (Theorems 2-4).
+
+Bidirectional: model the complex response directly (2x RPE width), pinning
+the imaginary part to zero at ω ∈ {0, π} so the time kernel is real; one
+fewer FFT than the baseline TNO.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hilbert import causal_spectrum
+from repro.core.rpe import MLPRPEConfig, mlp_rpe_apply, mlp_rpe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class FDConfig:
+    d: int
+    causal: bool = True
+    rpe_hidden: int = 64
+    rpe_layers: int = 3
+    rpe_act: str = "relu"     # decay class knob (Thms 2-4)
+    use_layernorm: bool = True
+    # "linear": paper-faithful omega input. "cos": beyond-paper periodic
+    # feature map omega -> cos(omega) - the even/periodic extension of a
+    # linear-omega MLP has derivative kinks at omega in {0, pi} that force
+    # ~1/m^2 kernel decay REGARDLESS of activation smoothness (breaking
+    # Thms 2-4's hypothesis); cos makes khat smooth as a *periodic*
+    # function so the activation's decay class actually binds (DESIGN
+    # par.7; tested in test_paper_core).
+    feature: str = "linear"
+
+
+def _rpe_cfg(cfg: FDConfig) -> MLPRPEConfig:
+    width = cfg.d if cfg.causal else 2 * cfg.d
+    return MLPRPEConfig(width, cfg.rpe_hidden, cfg.rpe_layers, cfg.rpe_act,
+                        cfg.use_layernorm)
+
+
+def fd_init(key, cfg: FDConfig):
+    return {"rpe": mlp_rpe_init(key, _rpe_cfg(cfg))}
+
+
+def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
+    """Evaluate the (d, n+1) complex frequency response on the rfft grid.
+
+    Evaluating with a finer grid (larger n) extrapolates to longer
+    sequences — in frequency, resolution scales with signal length, so
+    length extrapolation is grid refinement, not model extrapolation.
+    """
+    omega = jnp.arange(n + 1, dtype=jnp.float32) / n  # omega/pi in [0, 1]
+    if cfg.feature == "cos":
+        omega = jnp.cos(jnp.pi * omega)
+    out = mlp_rpe_apply(params["rpe"], _rpe_cfg(cfg), omega)  # (n+1, width)
+    if cfg.causal:
+        khat_real = out.T                                     # (d, n+1)
+        return causal_spectrum(khat_real)
+    re, im = out[:, : cfg.d].T, out[:, cfg.d:].T              # (d, n+1)
+    # real-valued time kernel: imag must vanish at DC and Nyquist
+    mask = jnp.ones((n + 1,), jnp.float32).at[0].set(0.0).at[n].set(0.0)
+    return re + 1j * (im * mask)
+
+
+def fd_tno_apply(params, cfg: FDConfig, x: jax.Array) -> jax.Array:
+    """x: (b, n, d) -> (b, n, d) via one rfft/irfft pair on x only."""
+    b, n, d = x.shape
+    khat = kernel_spectrum(params, cfg, n)                    # (d, n+1)
+    xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)  # (b,n+1,d)
+    y = jnp.fft.irfft(xhat * khat.T[None], n=2 * n, axis=1)[:, :n]
+    return y.astype(x.dtype)
+
+
+def fd_kernel_time(params, cfg: FDConfig, n: int) -> jax.Array:
+    """Time-domain kernel (d, 2n): lags 0..n then -(n-1)..-1 (circular
+    layout). Used by tests (causality ⇒ zeros at negative lags) and by the
+    decay-class experiments (Appendix E.3 reproduction)."""
+    khat = kernel_spectrum(params, cfg, n)
+    return jnp.fft.irfft(khat, n=2 * n, axis=-1)

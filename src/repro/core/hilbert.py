@@ -1,0 +1,88 @@
+"""Discrete Hilbert transform & causal spectrum construction (paper §3.3.1).
+
+The causal FD-TNO models only the *real* part ``khat`` of a kernel's
+frequency response on the rfft grid ``w_m = m*pi/n`` (m = 0..n, i.e. the
+rfft bins of a length-2n real signal) and recovers the imaginary part with
+a discrete Hilbert transform:  ``khat_causal = khat - i * H{khat}``.
+
+Identity used throughout: for a length-N DFT, ``u - i*H{u}`` is exactly the
+spectrum of the one-sided (causal) window of ``irfft(u)`` — i.e. the
+analytic-signal construction applied in the frequency variable. We provide
+both the paper's convolution form (Definition 1, for tests) and the
+FFT form (Algorithm 2's "via the rFFT and irFFT", for production).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hilbert_kernel(n_taps: int) -> jax.Array:
+    """Paper Definition 1: h[l] = 0 (l even), 2/(pi*l) (l odd); lags -n..n."""
+    l = jnp.arange(-n_taps, n_taps + 1)
+    odd = (l % 2) != 0
+    return jnp.where(odd, 2.0 / (jnp.pi * jnp.where(odd, l, 1)), 0.0)
+
+
+def discrete_hilbert_conv(u: jax.Array) -> jax.Array:
+    """H{u} by direct convolution with the periodised Definition-1 kernel —
+    O(n^2) oracle used only in tests.
+
+    For an M-periodic sequence (M even) the periodisation of the paper's
+    h[l] = 2/(pi l) (odd l) has the closed form (2/M)·cot(pi l / M) for odd
+    l and 0 for even l; as M -> inf it recovers 2/(pi l).
+    """
+    m = u.shape[-1]
+    l = jnp.arange(m)
+    odd = (l % 2) != 0
+    h_per = jnp.where(odd, (2.0 / m) / jnp.tan(jnp.pi * jnp.where(l > 0, l, 1) / m), 0.0)
+    idx = (jnp.arange(m)[:, None] - jnp.arange(m)[None, :]) % m
+    return jnp.einsum("...j,kj->...k", u.astype(jnp.float32), h_per[idx])
+
+
+def _dft_sign(m: int) -> jax.Array:
+    """sign(+freq)=+1, sign(-freq)=-1, 0 at DC and (if even) Nyquist."""
+    f = jnp.fft.fftfreq(m)
+    return jnp.sign(f).at[0].set(0.0)
+
+
+def discrete_hilbert(u: jax.Array) -> jax.Array:
+    """FFT-based discrete Hilbert transform of a periodic sequence (axis -1)."""
+    m = u.shape[-1]
+    sgn = _dft_sign(m)
+    spec = jnp.fft.fft(u.astype(jnp.float32), axis=-1)
+    return jnp.fft.ifft(spec * (-1j) * sgn, axis=-1).real.astype(u.dtype)
+
+
+def causal_spectrum(khat_real: jax.Array) -> jax.Array:
+    """khat_real: (..., n+1) real samples on the rfft grid of a length-2n
+    signal. Returns complex (..., n+1) ``khat - i*H{khat}`` whose irfft is
+    (exactly) a causal length-2n kernel supported on lags 0..n.
+
+    Implemented by the equivalent one-sided time-window (2 real FFTs), which
+    is the numerically-exact form of Algorithm 2's Hilbert step.
+    """
+    npts = khat_real.shape[-1] - 1
+    two_n = 2 * npts
+    k_time = jnp.fft.irfft(khat_real.astype(jnp.float32), n=two_n, axis=-1)
+    # analytic-signal window in the lag variable: keep lag 0 and lag n as-is,
+    # double lags 1..n-1, zero lags n+1..2n-1 (negative lags).
+    w = jnp.concatenate([
+        jnp.ones((1,)), 2.0 * jnp.ones((npts - 1,)), jnp.ones((1,)),
+        jnp.zeros((npts - 1,)),
+    ])
+    k_causal = k_time * w
+    return jnp.fft.rfft(k_causal, n=two_n, axis=-1)
+
+
+def causal_spectrum_via_hilbert(khat_real: jax.Array) -> jax.Array:
+    """Literal paper form: khat - i * H{khat} with H over the even-symmetric
+    extension of the rfft-grid samples. Matches :func:`causal_spectrum`.
+    """
+    npts = khat_real.shape[-1] - 1
+    # even-symmetric periodic extension over the full 2n DFT grid
+    body = khat_real[..., 1:-1]
+    full = jnp.concatenate([khat_real, body[..., ::-1]], axis=-1)  # (.., 2n)
+    h = discrete_hilbert(full)
+    spec = full - 1j * h
+    return spec[..., : npts + 1]

@@ -1,0 +1,93 @@
+"""Relative positional encoders (paper §3.1-3.3).
+
+Three families:
+
+* ``MLPRPE`` — the original TNN RPE: an MLP mapping a scalar relative
+  position (or frequency, for FD-TNO) to d channel values. Activation is
+  configurable because the paper's Theorems 2-4 tie the activation's
+  smoothness to the implied time-domain decay class (GeLU > SiLU > ReLU).
+* ``InterpRPE`` — the paper's SKI replacement: d learned piecewise-linear
+  functions on [-1, 1] (Prop. 1 shows the ReLU MLP is exactly this class),
+  pinned to 0 at x=0, evaluated through the inverse time warp
+  ``x(t) = sign(t) * lambda^|t|`` so extrapolation in t becomes
+  interpolation in x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import mlp_apply, mlp_init
+from repro.nn.params import KeyGen, boxed
+
+
+# ----------------------------------------------------------------- MLP RPE
+@dataclasses.dataclass(frozen=True)
+class MLPRPEConfig:
+    d_out: int              # channels (2*d for bidirectional FD-TNO)
+    d_hidden: int = 64
+    n_layers: int = 3
+    act: str = "relu"
+    use_layernorm: bool = True
+
+
+def mlp_rpe_init(key, cfg: MLPRPEConfig):
+    return mlp_init(key, 1, cfg.d_hidden, cfg.d_out, cfg.n_layers,
+                    use_layernorm=cfg.use_layernorm)
+
+
+def mlp_rpe_apply(params, cfg: MLPRPEConfig, pos: jax.Array) -> jax.Array:
+    """pos: (m,) scalar positions -> (m, d_out)."""
+    return mlp_apply(params, pos[:, None].astype(jnp.float32), act=cfg.act)
+
+
+# ------------------------------------------------------------- interp RPE
+@dataclasses.dataclass(frozen=True)
+class InterpRPEConfig:
+    d_out: int
+    grid_size: int = 129     # odd => grid contains x = 0 exactly
+
+
+def interp_rpe_init(key, cfg: InterpRPEConfig):
+    kg = KeyGen(key)
+    # values at uniform grid on [-1, 1]; pinning to 0 at x=0 is enforced in
+    # apply by subtracting the interpolated value at 0.
+    vals = boxed(kg(), (cfg.d_out, cfg.grid_size), ("tno_channel", None),
+                 "normal", scale=0.02)
+    return {"vals": vals}
+
+
+def piecewise_linear_eval(vals: jax.Array, x: jax.Array) -> jax.Array:
+    """vals: (d, g) node values on uniform grid over [-1,1]; x: (m,) query
+    points in [-1, 1]. Returns (m, d). Clamps outside the grid."""
+    g = vals.shape[-1]
+    xf = (jnp.clip(x, -1.0, 1.0) + 1.0) * 0.5 * (g - 1)
+    lo = jnp.clip(jnp.floor(xf).astype(jnp.int32), 0, g - 2)
+    frac = (xf - lo.astype(xf.dtype))[:, None]
+    vlo = vals[:, lo].T  # (m, d)
+    vhi = vals[:, lo + 1].T
+    return vlo * (1.0 - frac) + vhi * frac
+
+
+def interp_rpe_apply(params, cfg: InterpRPEConfig, x: jax.Array) -> jax.Array:
+    """x: (m,) warped positions in [-1,1] -> (m, d) with RPE(0) == 0."""
+    vals = params["vals"].value if hasattr(params["vals"], "value") else params["vals"]
+    v = piecewise_linear_eval(vals, x)
+    v0 = piecewise_linear_eval(vals, jnp.zeros((1,), x.dtype))
+    return v - v0
+
+
+# --------------------------------------------------------- inverse time warp
+def inverse_time_warp(t: jax.Array, lam: float) -> jax.Array:
+    """x(t) = sign(t) * lambda^|t|, lambda in (0,1). Maps Z -> [-1, 1],
+    x(0) = 0; far lags cluster near 0, near lags near +-1 (paper §3.2.2)."""
+    t = t.astype(jnp.float32)
+    return jnp.sign(t) * jnp.power(lam, jnp.abs(t))
+
+
+def decay_bias(t: jax.Array, lam: float) -> jax.Array:
+    """Original TNN decay bias lambda^|t| (eliminated by this paper's
+    variants; kept for the faithful baseline)."""
+    return jnp.power(lam, jnp.abs(t.astype(jnp.float32)))

@@ -1,0 +1,113 @@
+"""Sparse + low-rank TNO via asymmetric SKI (paper §3.2, Algorithm 1).
+
+``T ≈ T_sparse + W A W^T`` where
+
+* ``T_sparse`` (m non-zero diagonals) acts as a per-channel short 1-D conv;
+* ``A`` is the r x r inducing-point Gram matrix of the warped-interp kernel
+  ``k_l(t) = RPE_l(sign(t) λ^|t|)`` — itself Toeplitz because inducing
+  points are uniform, so its action is an O(r log r) FFT matvec (we use a
+  direct small matmul below r=512: MXU-friendlier, see DESIGN §3);
+* ``W`` is the banded linear-interpolation matrix (≤2 non-zeros/row),
+  applied in O(n) (Pallas kernel on TPU; scatter/gather oracle elsewhere).
+
+Total: O(n + r log r) — the paper's mathematical complexity, which their
+PyTorch implementation could not reach (sparse-tensor reshape overhead);
+the TPU port does (DESIGN §3 item 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import toeplitz
+from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply, interp_rpe_init,
+                            inverse_time_warp)
+from repro.kernels import ops
+from repro.nn.params import KeyGen, boxed
+
+
+@dataclasses.dataclass(frozen=True)
+class SKIConfig:
+    d: int                    # channels
+    rank: int = 64            # r inducing points
+    filter_size: int = 32     # m sparse diagonals
+    lam: float = 0.99         # inverse-time-warp decay
+    grid_size: int = 129      # interp-RPE grid nodes on [-1,1]
+    use_pallas: bool | None = None
+
+
+def make_inducing(n: int, r: int):
+    """Uniform inducing points on [0, n-1]; returns (idx_lo, w_lo, h)."""
+    h = (n - 1) / (r - 1)
+    i = jnp.arange(n, dtype=jnp.float32)
+    f = i / h
+    lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
+    # clamp: fp32 rounding of the irrational spacing h can push the
+    # boundary weight a few ulp outside [0, 1]
+    w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)
+    return lo, w_lo, h
+
+
+def ski_init(key, cfg: SKIConfig):
+    kg = KeyGen(key)
+    rpe = interp_rpe_init(kg(), InterpRPEConfig(cfg.d, cfg.grid_size))
+    filt = boxed(kg(), (cfg.d, cfg.filter_size), ("tno_channel", None),
+                 "normal", scale=0.02)
+    return {"rpe": rpe, "filt": filt}
+
+
+def inducing_gram_coeffs(params, cfg: SKIConfig, r: int, h: float):
+    """(d, 2r-1) Toeplitz coefficients of A at warped inducing lags."""
+    lag = jnp.arange(-(r - 1), r, dtype=jnp.float32) * h
+    x = inverse_time_warp(lag, cfg.lam)
+    vals = interp_rpe_apply(params["rpe"], InterpRPEConfig(cfg.d, cfg.grid_size), x)
+    return vals.T  # (d, 2r-1)
+
+
+def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
+                  causal: bool = False) -> jax.Array:
+    """x: (b, n, d) -> (b, n, d). Bidirectional by default (paper trains
+    SKI only bidirectionally; the causal flag exists for the Appendix-B
+    negative-result benchmark via core.causal_ski)."""
+    b, n, d = x.shape
+    r = min(cfg.rank, n)
+    idx_lo, w_lo, h = make_inducing(n, r)
+
+    # sparse component: short depthwise conv
+    y_sparse = ops.short_conv(x, params["filt"], causal,
+                              use_pallas=cfg.use_pallas)
+
+    # low-rank component: W A W^T x
+    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)
+    a_coef = inducing_gram_coeffs(params, cfg, r, h)          # (d, 2r-1)
+    if causal:
+        a_coef = toeplitz.causal_mask_coeffs(a_coef, r)
+    zt = jnp.swapaxes(z, 1, 2)                                 # (b, d, r)
+    zt = toeplitz.toeplitz_matvec(a_coef[None], zt)            # A z
+    z2 = jnp.swapaxes(zt, 1, 2)                                # (b, r, d)
+    y_low = ops.interp_expand(z2, idx_lo, w_lo, use_pallas=cfg.use_pallas)
+    return (y_sparse + y_low).astype(x.dtype)
+
+
+def ski_dense_oracle(params, cfg: SKIConfig, n: int) -> jax.Array:
+    """Materialise T_sparse + W A W^T as dense (d, n, n) — tests only."""
+    from repro.kernels.ref import dense_interp_matrix
+    r = min(cfg.rank, n)
+    idx_lo, w_lo, h = make_inducing(n, r)
+    w = dense_interp_matrix(idx_lo, w_lo, r)                   # (n, r)
+    a_coef = inducing_gram_coeffs(params, cfg, r, h)
+    a = toeplitz.dense_toeplitz(a_coef, r)                     # (d, r, r)
+    t_low = jnp.einsum("nr,drs,ms->dnm", w, a, w)
+    # sparse part as a banded matrix
+    m = cfg.filter_size
+    left = m // 2
+    filt = params["filt"]
+    i = jnp.arange(n)
+    lag = i[:, None] - i[None, :]
+    k_idx = lag + left                                         # tap index
+    valid = (k_idx >= 0) & (k_idx < m)
+    t_sp = jnp.where(valid[None], filt[:, jnp.clip(k_idx, 0, m - 1)], 0.0)
+    return t_low + t_sp

@@ -1,0 +1,89 @@
+"""Toeplitz Neural Operator — baseline (Qin et al. 2023) + unified dispatch.
+
+The baseline TNO is the paper's *floor*: an MLP RPE evaluated at all 2n-1
+relative positions, multiplied by the decay bias λ^|t|, applied per channel
+with the O(n log n) FFT Toeplitz matvec. ``TNOConfig.variant`` selects the
+paper's accelerated variants (ski / fd) behind one interface so any model
+in the zoo can swap its token mixer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fd, ski, toeplitz
+from repro.core.rpe import (MLPRPEConfig, decay_bias, mlp_rpe_apply,
+                            mlp_rpe_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class TNOConfig:
+    d: int
+    variant: str = "tno"        # tno | ski | fd
+    causal: bool = True
+    lam: float = 0.99           # decay bias (tno) / time warp (ski)
+    use_decay: bool = True      # baseline decay bias on/off
+    # MLP RPE (tno & fd variants)
+    rpe_hidden: int = 64
+    rpe_layers: int = 3
+    rpe_act: str = "relu"
+    # SKI
+    rank: int = 64
+    filter_size: int = 32
+    grid_size: int = 129
+    use_pallas: bool | None = None
+
+    def fd_cfg(self) -> fd.FDConfig:
+        return fd.FDConfig(self.d, self.causal, self.rpe_hidden,
+                           self.rpe_layers, self.rpe_act)
+
+    def ski_cfg(self) -> ski.SKIConfig:
+        return ski.SKIConfig(self.d, self.rank, self.filter_size, self.lam,
+                             self.grid_size, self.use_pallas)
+
+    def mlp_cfg(self) -> MLPRPEConfig:
+        return MLPRPEConfig(self.d, self.rpe_hidden, self.rpe_layers,
+                            self.rpe_act)
+
+
+def tno_init(key, cfg: TNOConfig):
+    if cfg.variant == "tno":
+        return {"rpe": mlp_rpe_init(key, cfg.mlp_cfg())}
+    if cfg.variant == "fd":
+        return fd.fd_init(key, cfg.fd_cfg())
+    if cfg.variant == "ski":
+        return ski.ski_init(key, cfg.ski_cfg())
+    raise ValueError(cfg.variant)
+
+
+def baseline_coeffs(params, cfg: TNOConfig, n: int) -> jax.Array:
+    """(d, 2n-1) Toeplitz coefficients: λ^|t| · RPE(t)."""
+    t = toeplitz.lags(n).astype(jnp.float32)
+    vals = mlp_rpe_apply(params["rpe"], cfg.mlp_cfg(), t / n)  # (2n-1, d)
+    if cfg.use_decay:
+        vals = vals * decay_bias(t, cfg.lam)[:, None]
+    coef = vals.T
+    if cfg.causal:
+        coef = toeplitz.causal_mask_coeffs(coef, n)
+    return coef
+
+
+def tno_apply(params, cfg: TNOConfig, x: jax.Array) -> jax.Array:
+    """Unified TNO: x (b, n, d) -> (b, n, d)."""
+    if cfg.variant == "fd":
+        return fd.fd_tno_apply(params, cfg.fd_cfg(), x)
+    if cfg.variant == "ski":
+        return ski.ski_tno_apply(params, cfg.ski_cfg(), x, causal=cfg.causal)
+    # baseline
+    n = x.shape[1]
+    coef = baseline_coeffs(params, cfg, n)
+    xt = jnp.swapaxes(x, 1, 2)                       # (b, d, n)
+    yt = toeplitz.toeplitz_matvec(coef[None], xt)
+    return jnp.swapaxes(yt, 1, 2).astype(x.dtype)
+
+
+def tno_dense_oracle(params, cfg: TNOConfig, n: int) -> jax.Array:
+    """Dense (d, n, n) Toeplitz matrices — tests only."""
+    return toeplitz.dense_toeplitz(baseline_coeffs(params, cfg, n), n)

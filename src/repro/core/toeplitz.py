@@ -1,0 +1,68 @@
+"""Toeplitz matrix actions via circulant embedding + FFT.
+
+Conventions
+-----------
+A length-n Toeplitz matrix ``T_ij = t[i - j]`` is parametrised by its
+coefficients at lags ``-(n-1) .. (n-1)``. We store them as an array
+``t`` of shape (..., 2n-1) with ``t[..., k]`` holding lag ``k - (n-1)``
+(i.e. index 0 is the most-negative lag, index n-1 is lag 0).
+
+``toeplitz_matvec`` embeds T in a 2n circulant and uses a real FFT:
+O(n log n), exactly the TNN fast path of Qin et al. 2023 that this paper
+accelerates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lags(n: int) -> jax.Array:
+    """Integer lags -(n-1)..(n-1) matching the coefficient layout."""
+    return jnp.arange(-(n - 1), n)
+
+
+def dense_toeplitz(t: jax.Array, n: int) -> jax.Array:
+    """Materialise the (..., n, n) Toeplitz matrix (oracle / small r only)."""
+    assert t.shape[-1] == 2 * n - 1
+    i = jnp.arange(n)
+    idx = (i[:, None] - i[None, :]) + (n - 1)  # lag -> coefficient index
+    return t[..., idx]
+
+
+def _circulant_coeffs(t: jax.Array, n: int) -> jax.Array:
+    """(..., 2n-1) lag layout -> (..., 2n) circulant first column."""
+    # c[k] = t(lag k) for k=0..n-1 ; c[n] = 0 (pad) ; c[2n-k] = t(lag -k)
+    pos = t[..., n - 1:]                       # lags 0..n-1
+    neg = t[..., : n - 1]                      # lags -(n-1)..-1 (ascending)
+    pad = jnp.zeros(t.shape[:-1] + (1,), t.dtype)
+    return jnp.concatenate([pos, pad, neg], axis=-1)
+
+
+def toeplitz_matvec(t: jax.Array, x: jax.Array) -> jax.Array:
+    """y[..., i] = sum_j t[i-j] x[..., j] via length-2n rFFT.
+
+    t: (..., 2n-1) broadcastable against x's batch dims; x: (..., n).
+    """
+    n = x.shape[-1]
+    assert t.shape[-1] == 2 * n - 1, (t.shape, x.shape)
+    c = _circulant_coeffs(t, n)
+    fc = jnp.fft.rfft(c.astype(jnp.float32), axis=-1)
+    fx = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=-1)
+    y = jnp.fft.irfft(fc * fx, n=2 * n, axis=-1)[..., :n]
+    return y.astype(x.dtype)
+
+
+def toeplitz_matvec_causal(t_causal: jax.Array, x: jax.Array) -> jax.Array:
+    """Causal Toeplitz action: t_causal (..., n) holds lags 0..n-1."""
+    n = x.shape[-1]
+    assert t_causal.shape[-1] == n
+    neg = jnp.zeros(t_causal.shape[:-1] + (n - 1,), t_causal.dtype)
+    t = jnp.concatenate([neg, t_causal], axis=-1)
+    return toeplitz_matvec(t, x)
+
+
+def causal_mask_coeffs(t: jax.Array, n: int) -> jax.Array:
+    """Zero the negative-lag coefficients (causal masking of T)."""
+    mask = (lags(n) >= 0).astype(t.dtype)
+    return t * mask

@@ -1,0 +1,63 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+Dispatch policy: explicit ``use_pallas`` argument wins; the global default
+(set via :func:`set_default_backend` / ``REPRO_USE_PALLAS``) is used
+otherwise. On this CPU container the Pallas path runs in interpret mode
+(tests); TPU is the compiled target.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_DEFAULT_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def set_default_backend(use_pallas: bool) -> None:
+    global _DEFAULT_PALLAS
+    _DEFAULT_PALLAS = bool(use_pallas)
+
+
+def _use_pallas(flag) -> bool:
+    return _DEFAULT_PALLAS if flag is None else bool(flag)
+
+
+def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=True):
+    """Depthwise short conv (sparse Toeplitz component). x (b,n,d), filt (d,m)."""
+    if _use_pallas(use_pallas):
+        from repro.kernels import short_conv as k
+        return k.short_conv_pallas(x, filt, causal, interpret=interpret)
+    return ref.short_conv_ref(x, filt, causal)
+
+
+def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=True):
+    """z = W^T x, banded linear-interp W. x (b,n,d) -> (b,r,d)."""
+    if _use_pallas(use_pallas):
+        from repro.kernels import interp_matvec as k
+        return k.interp_reduce_pallas(x, idx_lo, w_lo, r, interpret=interpret)
+    return ref.interp_reduce_ref(x, idx_lo, w_lo, r)
+
+
+def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=True):
+    """y = W z. z (b,r,d) -> (b,n,d)."""
+    if _use_pallas(use_pallas):
+        from repro.kernels import interp_matvec as k
+        return k.interp_expand_pallas(z, idx_lo, w_lo, interpret=interpret)
+    return ref.interp_expand_ref(z, idx_lo, w_lo)
+
+
+def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
+             interpret=True, hshard=None):
+    """Mamba-2 SSD. See ref.ssd_scan_ref for shapes."""
+    if _use_pallas(use_pallas):
+        from repro.kernels import ssd_scan as k
+        return k.ssd_scan_pallas(x, dt, a, b, c, d_skip, chunk=chunk,
+                                 interpret=interpret)
+    from repro.kernels import ssd_chunked
+    return ssd_chunked.ssd_scan_chunked(x, dt, a, b, c, d_skip, chunk=chunk,
+                                        hshard=hshard)

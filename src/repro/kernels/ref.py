@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the semantics contract: each Pallas kernel must match its oracle
+to float tolerance across shape/dtype sweeps (tests/test_kernels.py), and
+they double as the CPU/dry-run execution path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- short conv
+def short_conv_ref(x: jax.Array, filt: jax.Array, causal: bool) -> jax.Array:
+    """Depthwise short 1-D convolution — the sparse Toeplitz component.
+
+    x: (b, n, d); filt: (d, m) per-channel taps.
+    causal: taps cover lags 0..m-1 (y_i = sum_k f[k] x_{i-k}).
+    bidirectional: taps cover lags -(m//2) .. m-1-m//2 (centered).
+    Returns (b, n, d). (Shift-add and custom-VJP variants were benchmarked
+    on XLA:CPU and lose to the grouped conv once backward is included —
+    EXPERIMENTS §Perf; the TPU path is the Pallas kernel.)
+    """
+    b, n, d = x.shape
+    m = filt.shape[-1]
+    left = 0 if causal else m // 2
+    dn = jax.lax.conv_dimension_numbers(
+        (b, n + m - 1, d), (m, 1, d), ("NHC", "HIO", "NHC"))
+    # depthwise: feature_group_count = d, kernel (m, 1, d)
+    k = jnp.flip(filt, axis=-1).T[:, None, :]  # (m, 1, d): cross-corr->conv
+    # pad so output index i reads lags (i - k + left) for k = 0..m-1
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (m - 1 - left, left), (0, 0)))
+    y = jax.lax.conv_general_dilated(
+        xp, k.astype(jnp.float32), (1,), "VALID",
+        dimension_numbers=dn, feature_group_count=d)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------- banded interp (SKI W)
+def interp_reduce_ref(x: jax.Array, idx_lo: jax.Array, w_lo: jax.Array,
+                      r: int) -> jax.Array:
+    """z = W^T x for banded linear-interpolation W (paper §3.2.1).
+
+    x: (b, n, d) -> (b, r, d). Implemented as the DENSE hat-weight matmul
+    (W is (n, r), < 1 MB): the paper's own §3.2.1 observation — on
+    accelerators (and XLA:CPU) the batched dense contraction beats
+    sparse scatter/gather up to large n. The O(n) banded form lives in
+    the Pallas kernel; a scatter oracle remains below for tests.
+    """
+    w = dense_interp_matrix(idx_lo, w_lo, r)          # (n, r)
+    z = jnp.einsum("nr,bnd->brd", w, x.astype(jnp.float32))
+    return z.astype(x.dtype)
+
+
+def interp_reduce_scatter_oracle(x, idx_lo, w_lo, r):
+    """Two-scatter-add O(n) oracle (tests only)."""
+    xl = x.astype(jnp.float32) * w_lo[None, :, None]
+    xh = x.astype(jnp.float32) * (1.0 - w_lo)[None, :, None]
+    z = jnp.zeros((x.shape[0], r, x.shape[2]), jnp.float32)
+    z = z.at[:, idx_lo, :].add(xl)
+    z = z.at[:, idx_lo + 1, :].add(xh)
+    return z.astype(x.dtype)
+
+
+def interp_expand_ref(z: jax.Array, idx_lo: jax.Array,
+                      w_lo: jax.Array) -> jax.Array:
+    """y = W z, dense hat-weight form. z: (b, r, d) -> (b, n, d)."""
+    r = z.shape[1]
+    w = dense_interp_matrix(idx_lo, w_lo, r)          # (n, r)
+    y = jnp.einsum("nr,brd->bnd", w, z.astype(jnp.float32))
+    return y.astype(z.dtype)
+
+
+def dense_interp_matrix(idx_lo: jax.Array, w_lo: jax.Array, r: int):
+    """Materialised (n, r) W for oracle comparisons in tests."""
+    n = idx_lo.shape[0]
+    w = jnp.zeros((n, r), jnp.float32)
+    w = w.at[jnp.arange(n), idx_lo].add(w_lo)
+    w = w.at[jnp.arange(n), idx_lo + 1].add(1.0 - w_lo)
+    return w
+
+
+# ------------------------------------------------------------- mamba2 SSD
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, d_skip: jax.Array) -> jax.Array:
+    """Mamba-2 SSD sequential oracle (state-space recurrence).
+
+    x: (bt, n, h, p)   inputs per head (p = head dim)
+    dt: (bt, n, h)     softplus'd step sizes (>0)
+    a: (h,)            negative state decay rates (A = -exp(a_log))
+    b: (bt, n, g, s)   input projections  (g groups, s = state dim)
+    c: (bt, n, g, s)   output projections
+    d_skip: (h,)       skip connection
+    Returns y: (bt, n, h, p).
+    """
+    bt, n, h, p = x.shape
+    g = b.shape[2]
+    heads_per_group = h // g
+    bx = jnp.repeat(b, heads_per_group, axis=2)  # (bt, n, h, s)
+    cx = jnp.repeat(c, heads_per_group, axis=2)
+
+    da = jnp.exp(dt * a[None, None, :])  # (bt, n, h) decay per step
+
+    def step(carry, inp):
+        xt, dtt, dat, bt_, ct_ = inp
+        # state: (bt, h, p, s)
+        new = carry * dat[..., None, None] + (
+            (dtt[..., None] * xt)[..., :, None] * bt_[..., None, :])
+        y = jnp.einsum("bhps,bhs->bhp", new, ct_)
+        return new, y
+
+    x_ = jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    dt_ = jnp.moveaxis(dt.astype(jnp.float32), 1, 0)
+    da_ = jnp.moveaxis(da.astype(jnp.float32), 1, 0)
+    b_ = jnp.moveaxis(bx.astype(jnp.float32), 1, 0)
+    c_ = jnp.moveaxis(cx.astype(jnp.float32), 1, 0)
+    init = jnp.zeros((bt, h, p, b.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, init, (x_, dt_, da_, b_, c_))
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)

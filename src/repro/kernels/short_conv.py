@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: depthwise short 1-D convolution (sparse Toeplitz part).
+
+TPU adaptation of the paper's ``T_sparse`` action (§3.2): the m-diagonal
+band is applied as m shifted VPU multiply-adds over VMEM-resident tiles.
+Halo exchange is done by passing the same HBM array under three BlockSpecs
+(prev / cur / next block), masked at the sequence edges — no gather, no
+sparse tensors (the paper's PyTorch pain point, DESIGN §3).
+
+Layout: x (b, n, d) tiled (1, BN, BD); filter (d, m) tiled (BD, m).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prev_ref, cur_ref, nxt_ref, filt_ref, o_ref, *, m, left, bn, nb_total):
+    nb = pl.program_id(2)
+    hl = m - 1 - left          # left halo
+    hr = left                  # right halo
+    prev = prev_ref[0]         # (bn, bd)
+    cur = cur_ref[0]
+    nxt = nxt_ref[0]
+    # mask halos at the sequence boundary (zero padding semantics)
+    prev = jnp.where(nb > 0, prev, jnp.zeros_like(prev))
+    nxt = jnp.where(nb < nb_total - 1, nxt, jnp.zeros_like(nxt))
+    xwin = jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
+                           axis=0) if hl else jnp.concatenate(
+                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
+    acc = jnp.zeros(cur.shape, jnp.float32)
+    f = filt_ref[...].astype(jnp.float32)          # (bd, m)
+    for k in range(m):
+        sl = xwin[(m - 1 - k):(m - 1 - k) + bn].astype(jnp.float32)
+        acc = acc + sl * f[:, k][None, :]
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret", "bn", "bd"))
+def short_conv_pallas(x, filt, causal: bool, *, interpret=True, bn=256, bd=128):
+    """x: (b, n, d); filt: (d, m). Matches ref.short_conv_ref."""
+    b, n, d = x.shape
+    m = filt.shape[-1]
+    left = 0 if causal else m // 2
+    bn = min(bn, n)
+    bd = min(bd, d)
+    assert n % bn == 0 and d % bd == 0, (n, bn, d, bd)
+    assert bn >= m, "block must cover the filter halo"
+    nb, db = n // bn, d // bd
+    grid = (b, db, nb)
+
+    def xmap(shift):
+        def f(bi, di, ni):
+            return (bi, jnp.clip(ni + shift, 0, nb - 1), di)
+        return f
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m, left=left, bn=bn, nb_total=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), xmap(-1)),
+            pl.BlockSpec((1, bn, bd), xmap(0)),
+            pl.BlockSpec((1, bn, bd), xmap(+1)),
+            pl.BlockSpec((bd, m), lambda bi, di, ni: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, bd), lambda bi, di, ni: (bi, ni, di)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=interpret,
+    )(x, x, x, filt)
+    return out

@@ -1,0 +1,104 @@
+"""Mamba-2 SSD via the chunked (state-space dual) algorithm — pure JAX.
+
+Within a chunk of length Q the recurrence is computed as a masked,
+decay-weighted quadratic form (MXU-friendly); across chunks a short
+``lax.scan`` carries the (h, p, s) state. Work: O(n Q (p + s)) + O(n p s)
+vs O(n p s) sequential — but with Q-sized matmuls instead of a length-n
+scan, which is the whole point on a systolic machine.
+
+This is the XLA execution path; ``ssd_scan.py`` holds the Pallas TPU kernel
+for the intra-chunk part and ``ref.ssd_scan_ref`` the sequential oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_chunked(x, dt, a, b, c, d_skip, *, chunk=64, hshard=None):
+    """Shapes as ref.ssd_scan_ref: x (bt,n,h,p), dt (bt,n,h), a (h,),
+    b/c (bt,n,g,s), d_skip (h,) -> y (bt,n,h,p).
+
+    ``hshard(arr, h_axis)`` (optional) re-asserts the head-axis TP
+    sharding on the chunk-state tensors: GSPMD loses it through the
+    inter-chunk scan carry and silently replicates h=256 states —
+    30 × 4.3 GiB/device at jamba train_4k (dry-run buffer dump,
+    EXPERIMENTS §Perf)."""
+    if hshard is None:
+        hshard = lambda arr, ax: arr
+    bt, n, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    q = min(chunk, n)
+    pad = (-n) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+
+    f32 = jnp.float32
+    xq = x.reshape(bt, nc, q, h, p).astype(f32)
+    dtq = dt.reshape(bt, nc, q, h).astype(f32)
+    bq = b.reshape(bt, nc, q, g, s).astype(f32)
+    cq = c.reshape(bt, nc, q, g, s).astype(f32)
+    hpg = h // g
+
+    loga = dtq * a[None, None, None, :]            # (bt,nc,q,h)  <= 0
+    cum = jnp.cumsum(loga, axis=2)                 # inclusive cumsum
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (bt,nc,q_i,q_j,h)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) * L[i,j] * dt[j]
+    cb = jnp.einsum("bnigs,bnjgs->bnijg", cq, bq)          # (bt,nc,q,q,g)
+    cb = jnp.repeat(cb, hpg, axis=4)                        # -> h
+    scores = cb * l_mat * dtq[:, :, None, :, :]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores, xq)
+
+    # chunk-final states: S_k = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (bt,nc,q,h)
+    bj = jnp.repeat(bq, hpg, axis=3)                        # (bt,nc,q,h,s)
+    w = decay_to_end * dtq                                  # (bt,nc,q,h)
+    s_chunk = jnp.einsum("bnjh,bnjhs,bnjhp->bnhps", w, bj, xq)
+    s_chunk = hshard(s_chunk, 2)
+
+    # inter-chunk recurrence over nc chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (bt,nc,h)
+
+    def step(carry, inp):
+        s_k, dec = inp                                      # (bt,h,p,s),(bt,h)
+        new = carry * dec[:, :, None, None] + s_k
+        return new, carry                                   # emit state BEFORE chunk
+
+    s_seq = jnp.moveaxis(s_chunk, 1, 0)                     # (nc,bt,h,p,s)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)
+    init = hshard(jnp.zeros((bt, h, p, s), f32), 1)
+    _, prev_states = jax.lax.scan(step, init, (s_seq, d_seq))
+    prev = hshard(jnp.moveaxis(prev_states, 0, 1), 2)       # (bt,nc,h,p,s)
+
+    # inter contribution: C_i . (prev_state * exp(cum_i))
+    cj = jnp.repeat(cq, hpg, axis=3)                        # (bt,nc,q,h,s)
+    y_inter = jnp.einsum("bnihs,bnhps,bnih->bnihp", cj, prev, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(bt, nc * q, h, p)[:, :n]
+    y = y + x.reshape(bt, nc * q, h, p)[:, :n] * d_skip[None, None, :, None]
+    return y.astype(jnp.result_type(x.dtype))
+
+
+def ssd_decode_step(state, x_t, dt_t, a, b_t, c_t, d_skip):
+    """Single-token recurrent update for serving.
+
+    state: (bt, h, p, s); x_t (bt,h,p); dt_t (bt,h); b_t/c_t (bt,g,s).
+    Returns (new_state, y_t (bt,h,p)).
+    """
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    hpg = h // g
+    bx = jnp.repeat(b_t, hpg, axis=1)   # (bt,h,s)
+    cx = jnp.repeat(c_t, hpg, axis=1)
+    da = jnp.exp(dt_t * a[None, :])     # (bt,h)
+    new = state * da[..., None, None] + (
+        (dt_t[..., None] * x_t)[..., :, None] * bx[..., None, :])
+    y = jnp.einsum("bhps,bhs->bhp", new, cx) + x_t * d_skip[None, :, None]
+    return new, y

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (intra + inter chunk fused).
+
+One (batch*head) slice per grid row; the chunk axis is the innermost,
+*sequential* grid dimension so the (p, s) running state lives in a VMEM
+scratch accumulator across chunk steps — the HBM<->VMEM traffic is exactly
+one pass over x/dt/B/C and one (q, p) output tile per chunk, i.e. the
+kernel is memory-roofline optimal for the SSD layer.
+
+Per chunk (all MXU matmuls):
+  scores = (C Bᵀ) ⊙ L ⊙ dt   (q,q)   y_intra = scores @ X      (q,p)
+  y_inter = (C ⊙ e^{cum}) @ Sᵀ        state' = e^{cum_q} S + Xᵀ(B ⊙ w)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dsk_ref, o_ref, state_ref,
+            *, q, p, s):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = jnp.zeros((p, s), jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (q, p)
+    dt = dt_ref[0].astype(jnp.float32)        # (q,)
+    a = a_ref[0]                              # scalar
+    bm = b_ref[0].astype(jnp.float32)         # (q, s)
+    cm = c_ref[0].astype(jnp.float32)         # (q, s)
+
+    loga = dt * a                             # (q,) <= 0
+    cum = jnp.cumsum(loga)                    # inclusive
+    seg = cum[:, None] - cum[None, :]         # (q, q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    scores = scores * l_mat * dt[None, :]
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)      # intra
+
+    state = state_ref[...]                    # (p, s)
+    y = y + jnp.dot(cm * jnp.exp(cum)[:, None], state.T,
+                    preferred_element_type=jnp.float32)             # inter
+
+    w = (jnp.exp(cum[-1] - cum) * dt)[:, None]                      # (q, 1)
+    state_ref[...] = state * jnp.exp(cum[-1]) + jnp.dot(
+        x.T, bm * w, preferred_element_type=jnp.float32)
+
+    y = y + x * dsk_ref[0]
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, a, b, c, d_skip, *, chunk=64, interpret=True):
+    """Shapes as ref.ssd_scan_ref. b/c are per-group; repeated to per-head
+    outside the kernel (g is small; repeat cost is n*h*s reads)."""
+    bt, n, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    hpg = h // g
+    q = min(chunk, n)
+    assert n % q == 0, (n, q)
+    nc = n // q
+
+    bx = jnp.repeat(b, hpg, axis=2)           # (bt, n, h, s)
+    cx = jnp.repeat(c, hpg, axis=2)
+    # flatten (bt, h) into one grid axis; layout (bt*h, n, ·)
+    xf = jnp.moveaxis(x, 2, 1).reshape(bt * h, n, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(bt * h, n)
+    bf = jnp.moveaxis(bx, 2, 1).reshape(bt * h, n, s)
+    cf = jnp.moveaxis(cx, 2, 1).reshape(bt * h, n, s)
+    af = jnp.tile(a, (bt,)).reshape(bt * h)
+    df = jnp.tile(d_skip, (bt,)).reshape(bt * h)
+
+    grid = (bt * h, nc)
+    out = pl.pallas_call(
+        functools.partial(_kernel, q=q, p=p, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+            pl.BlockSpec((1, q, s), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, q, s), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt * h, n, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf, df)
+    return jnp.moveaxis(out.reshape(bt, h, n, p), 1, 2)

@@ -1,0 +1,3 @@
+# launch: mesh construction, dry-run, train/serve entrypoints.
+# NOTE: dryrun must be imported first in its own process (it sets XLA_FLAGS
+# before jax initialises); never import repro.launch.dryrun from library code.

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware. For every (arch × shape × mesh) cell this lowers + compiles the
+real train/serve step against ShapeDtypeStruct inputs on 512 placeholder
+CPU devices, then records
+
+* ``memory_analysis()``  — bytes/device (proves the cell fits HBM),
+* ``cost_analysis()``    — HLO FLOPs & bytes (roofline compute/memory terms),
+* collective bytes       — parsed from compiled HLO text per collective op
+                           (roofline collective term).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--out dir/]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (SHAPES, FULL_ATTENTION_ONLY, ShapeSpec,
+                                StepBuilder, cell_is_applicable)
+from repro.optim import adamw
+
+ASSIGNED = [
+    "jamba-1.5-large-398b", "grok-1-314b", "granite-moe-3b-a800m",
+    "phi3-medium-14b", "qwen2-72b", "gemma3-4b", "stablelm-3b",
+    "paligemma-3b", "whisper-medium", "mamba2-2.7b",
+]
+
+# ------------------------------------------------- collective-bytes parser
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4, "s16": 2,
+    "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _bytes_of_shape_str(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        b = _DTYPE_BYTES.get(dt, 2 if dt.startswith("f8") else 4)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in compiled HLO,
+    bucketed by op kind. (Output bytes ≈ operand bytes for AG/AR/RS at the
+    full-tensor granularity we report; all-to-all moves its full shape.)"""
+    out = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"^[%\w.-]+\s*=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+            r"all-to-all|collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        nbytes = _bytes_of_shape_str(shape_str)
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ------------------------------------------------------------ cell runner
+def _opt_cfg_for(arch: str) -> adamw.OptConfig:
+    # bf16 moments for the ≥300B archs: the production choice that makes
+    # optimizer state fit 16 GB/chip HBM (DESIGN §5).
+    big = {"jamba-1.5-large-398b", "grok-1-314b"}
+    return adamw.OptConfig(
+        moments_dtype="bfloat16" if arch in big else "float32")
+
+
+def _lower_cell(cfg, shape, mesh, opt_cfg):
+    """Lower the cell's step for one concrete config. Shared by the full
+    compile (coherence + memory proof) and the unrolled cost probes."""
+    sb = StepBuilder(cfg, mesh, opt_cfg=opt_cfg)
+    specs = sb.input_specs(shape)
+    if shape.kind == "train":
+        params, axes = sb.abstract_params()
+        state_sh = sb.state_shardings()
+        state_abs = jax.eval_shape(
+            lambda: {"params": params,
+                     "opt": adamw.init(sb.opt_cfg, params)})
+        in_sh = sb.input_shardings(shape, specs)
+        step = sb.make_train_step()
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh, in_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_abs, specs)
+    elif shape.kind == "prefill":
+        params, _ = sb.abstract_params()
+        in_sh = sb.input_shardings(shape, specs)
+        fwd = sb.make_forward()
+        lowered = jax.jit(
+            fwd, in_shardings=(sb.param_shardings(), in_sh),
+        ).lower(params, specs)
+    else:  # decode
+        params, _ = sb.abstract_params()
+        in_sh = sb.input_shardings(shape, specs)
+        serve = sb.make_serve_step(shape)
+        lowered = jax.jit(
+            serve,
+            in_shardings=(sb.param_shardings(), in_sh["batch"],
+                          in_sh["cache"], NamedSharding(mesh, P())),
+            out_shardings=(None, in_sh["cache"]),
+            donate_argnums=(2,),
+        ).lower(params, specs["batch"], specs["cache"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    return lowered
+
+
+def _measure(lowered):
+    """compile + extract (per-device) costs. XLA cost_analysis reports
+    PER-DEVICE numbers post-SPMD, and counts each while-loop (scan) body
+    ONCE — both verified empirically; the probe extrapolation below
+    corrects the loop undercount."""
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "hlo_bytes": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+
+
+def _probe_cfg(cfg, mult: int):
+    """Unrolled small-depth clone for exact cost accounting."""
+    kw = dict(n_layers=cfg.period * mult, scan_layers=False,
+              unroll_inner=True, name=f"{cfg.name}-probe{mult}")
+    if cfg.kind == "encdec":
+        kw["enc_layers"] = mult
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, probes: bool = True) -> dict:
+    """Full-config lower+compile (coherence + memory proof) plus, when
+    ``probes``, two unrolled shallow compiles whose cost delta gives the
+    exact per-layer-period FLOPs/bytes/collective bytes; the cell's
+    roofline numbers are X1 + (L/period - 1) · (X2 - X1) — linear in depth
+    because every period is an identical block."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = _opt_cfg_for(arch)
+    n_dev = mesh.size
+
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, mesh, opt_cfg)
+    t_lower = round(time.time() - t0, 1)
+    full = _measure(lowered)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev, "kind": shape.kind, "lower_s": t_lower, **full,
+    }
+
+    if probes:
+        p1 = _measure(_lower_cell(_probe_cfg(cfg, 1), shape, mesh, opt_cfg))
+        p2 = _measure(_lower_cell(_probe_cfg(cfg, 2), shape, mesh, opt_cfg))
+        mult = cfg.n_layers / cfg.period - 1.0
+        extr = {}
+        for key in ("flops", "hlo_bytes"):
+            extr[key] = p1[key] + mult * (p2[key] - p1[key])
+        c1 = p1["collective_bytes"].get("total", 0)
+        c2 = p2["collective_bytes"].get("total", 0)
+        extr["collective_bytes_total"] = c1 + mult * (c2 - c1)
+        extr["per_period"] = {
+            "flops": p2["flops"] - p1["flops"],
+            "hlo_bytes": p2["hlo_bytes"] - p1["hlo_bytes"],
+            "collective_bytes": c2 - c1,
+        }
+        result["probe"] = {"p1": p1, "p2": p2, "extrapolated": extr}
+
+    if verbose:
+        gb = 1 << 30
+        tmp = result["memory"]["temp_size"] or 0
+        arg = result["memory"]["argument_size"] or 0
+        ex = result.get("probe", {}).get("extrapolated", {})
+        print(f"[dryrun] {arch} × {shape_name} × {result['mesh']}: "
+              f"lower {t_lower}s compile {result['compile_s']}s | "
+              f"per-dev FLOPs {ex.get('flops', result['flops']):.3e} "
+              f"bytes {ex.get('hlo_bytes', result['hlo_bytes']):.3e} "
+              f"coll {ex.get('collective_bytes_total', 0):.3e} | "
+              f"args {arg / gb:.2f} GiB temp {tmp / gb:.2f} GiB")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch × shape) cell")
+    ap.add_argument("--out", default=None, help="write JSON result(s)")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled cost probes (multi-pod pass: "
+                    "the roofline table is single-pod only)")
+    args = ap.parse_args(argv)
+    probes = not (args.no_probes or args.multi_pod)
+
+    def _flush(results):
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    results = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                if not cell_is_applicable(arch, shape):
+                    print(f"[dryrun] SKIP {arch} × {shape} (inapplicable)")
+                    continue
+                try:
+                    results.append(run_cell(arch, shape,
+                                            multi_pod=args.multi_pod,
+                                            probes=probes))
+                except Exception as e:     # record + continue the queue
+                    print(f"[dryrun] FAIL {arch} × {shape}: {e!r}")
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if args.multi_pod else "16x16",
+                                    "error": repr(e)})
+                _flush(results)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        if not cell_is_applicable(args.arch, args.shape):
+            print(f"[dryrun] SKIP {args.arch} × {args.shape} (inapplicable)")
+            return 0
+        results.append(run_cell(args.arch, args.shape,
+                                multi_pod=args.multi_pod, probes=probes))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,261 @@
+"""jit-able train_step / serve_step builders + ShapeDtypeStruct input specs.
+
+This is the seam between the model zoo and the distribution layer: a
+``StepBuilder`` binds (ArchConfig, mesh, sharding rules) and produces
+
+* ``init_state()``       — params (+ optimizer) with NamedShardings
+* ``train_step``         — loss/grad/optimizer update, jit-able
+* ``serve_step``         — one-token decode against a KV/state cache
+* ``input_specs(shape)`` — ShapeDtypeStructs for every model input of an
+  assigned (arch × shape) cell: no allocation, weak-type-correct,
+  shardable — exactly what ``jax.jit(...).lower()`` wants for the
+  multi-pod dry-run.
+
+Shape grammar (assignment): ``train_*`` lowers train_step on (tokens,
+labels); ``prefill_*`` lowers the forward (logits only); ``decode_*`` /
+``long_*`` lower serve_step with a KV cache of seq_len.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import serving
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx
+from repro.models.transformer import forward, init_model, loss_fn
+from repro.nn.params import unbox
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingRules, rules_for_arch, spec_for
+
+
+# --------------------------------------------------------------- shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose every mixer is full attention — long_500k is skipped for them
+FULL_ATTENTION_ONLY = {
+    "grok-1-314b", "granite-moe-3b-a800m", "phi3-medium-14b", "qwen2-72b",
+    "stablelm-3b", "paligemma-3b", "whisper-medium",
+}
+
+
+def cell_is_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ONLY:
+        return False
+    return True
+
+
+# ------------------------------------------------------------ StepBuilder
+class StepBuilder:
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None, *,
+                 rules: Optional[ShardingRules] = None,
+                 opt_cfg: Optional[adamw.OptConfig] = None,
+                 use_pallas: Optional[bool] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules or (rules_for_arch(cfg, mesh) if mesh else None)
+        self.opt_cfg = opt_cfg or adamw.OptConfig()
+        data_axes = self.rules.data_axes if self.rules else ("data",)
+        # Sequence-parallel residual stream for training/prefill (Megatron
+        # SP): saved layer inputs are `model`-sharded on seq, which is what
+        # lets 70B+ train_4k fit HBM under layer-scan remat (DESIGN §5).
+        self.ctx = Ctx(mesh=mesh, data_axes=data_axes, use_pallas=use_pallas,
+                       seq_shard_resid=mesh is not None)
+        self._axes_tree = None
+
+    # ------------------------------------------------------------ params
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, axes tree) via eval_shape — no
+        allocation. The logical-axes tree is static metadata, captured
+        through a side channel during the abstract trace."""
+        store = {}
+
+        def f(k):
+            params, axes = unbox(init_model(k, self.cfg))
+            store["axes"] = axes
+            return params
+
+        vals = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return vals, store["axes"]
+
+    def param_shardings(self):
+        vals, axes = self.abstract_params()
+        mesh, rules = self.mesh, self.rules
+
+        def f(a, v):
+            return NamedSharding(mesh, spec_for(mesh, rules, a, v.shape))
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            s is None or isinstance(s, str) for s in x)
+        return jax.tree.map(f, axes, vals, is_leaf=is_axes)
+
+    def state_shardings(self):
+        """Shardings for (params, opt_state): moments mirror params."""
+        ps = self.param_shardings()
+        scalar = NamedSharding(self.mesh, P())
+        err = (jax.tree.map(lambda s: s, ps) if self.opt_cfg.compress_grads
+               else jax.tree.map(lambda _: scalar, ps))
+        return {"params": ps,
+                "opt": adamw.OptState(scalar, ps, ps, err)}
+
+    def init_state(self, key):
+        params, _ = unbox(init_model(key, self.cfg))
+        opt = adamw.init(self.opt_cfg, params)
+        return {"params": params, "opt": opt}
+
+    # ------------------------------------------------------------- steps
+    def make_train_step(self):
+        cfg, ctx, ocfg = self.cfg, self.ctx, self.opt_cfg
+
+        def train_step(state, batch):
+            def lf(p):
+                return loss_fn(p, cfg, ctx, batch)
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                state["params"])
+            opt, params, opt_metrics = adamw.step(
+                ocfg, state["opt"], grads, state["params"])
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return {"params": params, "opt": opt}, metrics
+
+        return train_step
+
+    def make_forward(self):
+        cfg, ctx = self.cfg, self.ctx
+
+        def fwd(params, batch):
+            logits, _ = forward(params, cfg, ctx, batch)
+            return logits
+        return fwd
+
+    def _mesh_sizes(self):
+        data = self.rules.data_axes
+        dsz = int(np.prod([self.mesh.shape[a] for a in data])) if self.mesh else 1
+        msz = self.mesh.shape.get(self.rules.model_axis, 1) if self.mesh else 1
+        return data, dsz, msz
+
+    def serve_ctx(self, shape: Optional[ShapeSpec] = None) -> Ctx:
+        """Decode context; for batch-1 long-context cells the idle data
+        axes fold into the KV-seq sharding (256-way over a 512k cache)."""
+        ctx = dataclasses.replace(self.ctx, decode=True,
+                                  seq_shard_resid=False)
+        if shape is None or self.mesh is None:
+            return ctx
+        data, dsz, msz = self._mesh_sizes()
+        if shape.global_batch % max(dsz, 1) != 0:
+            seq_ax = (tuple(data) + (self.rules.model_axis,)
+                      if shape.seq_len % (dsz * msz) == 0
+                      else (self.rules.model_axis,))
+            ctx = dataclasses.replace(ctx, data_axes=(), seq_kv_axes=seq_ax)
+        return ctx
+
+    def make_serve_step(self, shape: Optional[ShapeSpec] = None):
+        cfg = self.cfg
+        ctx = self.serve_ctx(shape)
+
+        def serve_step(params, batch, cache, cur_len):
+            return serving.decode_step(params, cfg, ctx, batch, cache, cur_len)
+        return serve_step
+
+    # ------------------------------------------------------- input specs
+    def batch_sharding(self):
+        data = (self.rules.data_axes if self.rules else ("data",))
+        return NamedSharding(self.mesh, P(data, None)) if self.mesh else None
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the cell's inputs (+ cache for decode)."""
+        cfg = self.cfg
+        b, n = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        adt = jnp.dtype(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((b, n), i32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((b, n), i32)
+            if cfg.kind == "prefix_vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_prefix, cfg.d_model), adt)
+            if cfg.kind == "encdec":
+                specs["enc_embed"] = jax.ShapeDtypeStruct(
+                    (b, n, cfg.d_model), adt)
+            return specs
+        # decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.kind == "encdec":
+            batch["enc_out"] = jax.ShapeDtypeStruct(
+                (b, min(n, 4096), cfg.d_model), adt)
+        cache = jax.eval_shape(
+            lambda: serving.init_cache(cfg, b, n, jnp.dtype(cfg.dtype)))
+        return {"batch": batch, "cache": cache}
+
+    def input_shardings(self, shape: ShapeSpec, specs):
+        """NamedShardings matching input_specs' structure. Every axis is
+        divisibility-guarded: a dim that the mesh extent does not divide is
+        replicated (the batch-1 long-context cells exercise this)."""
+        mesh = self.mesh
+        data, dsz, msz = self._mesh_sizes()
+        model = self.rules.model_axis
+        batch_ax = data if shape.global_batch % max(dsz, 1) == 0 else None
+        sctx = self.serve_ctx(shape)
+        kv_ax = sctx.seq_kv_axes            # ("model",) or data+model
+
+        def guard(ax, dim):
+            if ax is None:
+                return None
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in names]))
+            return ax if dim % size == 0 else None
+
+        def tok_like(s):
+            # batch over data; seq unsharded (FFT / full-seq mixers)
+            spec = [guard(batch_ax, s.shape[0])] + [None] * (len(s.shape) - 1)
+            return NamedSharding(mesh, P(*spec))
+
+        if shape.kind in ("train", "prefill"):
+            return jax.tree.map(tok_like, specs)
+
+        def cache_shard(path, s):
+            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            leaf = names[-1] if names else ""
+            nd = len(s.shape)
+            if leaf in ("k", "v"):          # (…, b, S, kvh, hd): seq-shard
+                spec = [None] * (nd - 4) + [
+                    guard(batch_ax, s.shape[nd - 4]),
+                    guard(kv_ax, s.shape[nd - 3]), None, None]
+            elif leaf == "hist":            # (…, b, S, d): seq-shard
+                spec = [None] * (nd - 3) + [
+                    guard(batch_ax, s.shape[nd - 3]),
+                    guard(kv_ax, s.shape[nd - 2]), None]
+            elif leaf == "conv":            # (…, b, w, conv_dim)
+                spec = [None] * (nd - 3) + [
+                    guard(batch_ax, s.shape[nd - 3]), None,
+                    guard(model, s.shape[nd - 1])]
+            elif leaf == "state":           # (…, b, h, p, s)
+                spec = [None] * (nd - 4) + [
+                    guard(batch_ax, s.shape[nd - 4]),
+                    guard(model, s.shape[nd - 3]), None, None]
+            else:
+                spec = [None] * nd
+            return NamedSharding(mesh, P(*spec))
+
+        batch_sh = jax.tree.map(tok_like, specs["batch"])
+        cache_sh = jax.tree_util.tree_map_with_path(cache_shard, specs["cache"])
+        return {"batch": batch_sh, "cache": cache_sh}

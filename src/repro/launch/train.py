@@ -1,0 +1,119 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires StepBuilder (jit'd train_step with NamedShardings) + data pipeline +
+fault-tolerant Trainer runtime. On this CPU container it runs real training
+at smoke scale (--smoke); on a TPU fleet the same file is the per-host
+entrypoint (jax.distributed.initialize is called when JAX_COORDINATOR is
+set).
+
+XLA flags recorded here for the TPU target (collective/compute overlap is
+XLA's latency-hiding scheduler; we enable aggressive async collectives):
+
+    --xla_tpu_enable_async_collective_fusion=true
+    --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+    --xla_tpu_overlap_compute_collective_tc=true
+    --xla_enable_async_all_gather=true
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import StepBuilder
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+TPU_XLA_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduce the config to CPU scale")
+    ap.add_argument("--mixer", default="",
+                    choices=["", "tno", "ski", "fd"],
+                    help="override the token mixer with a paper variant")
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "bytes", "lra_match"])
+    ap.add_argument("--data-path", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()           # multi-host fleet entry
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    if args.mixer:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, mixer_override=args.mixer)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    opt_cfg = adamw.OptConfig(lr=args.lr, warmup_steps=args.warmup,
+                              total_steps=args.steps)
+    sb = StepBuilder(cfg, mesh, opt_cfg=opt_cfg)
+
+    data_cfg = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed, kind=args.data,
+        path=args.data_path,
+        host_id=jax.process_index(), num_hosts=jax.process_count())
+
+    state_sh = sb.state_shardings()
+    train_step = jax.jit(sb.make_train_step(),
+                         in_shardings=(state_sh, None),
+                         out_shardings=(state_sh, None))
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put_batch(host_batch):
+        def put(v):
+            v = np.asarray(v)
+            sh = NamedSharding(
+                mesh, P(sb.rules.data_axes, *([None] * (v.ndim - 1))))
+            return jax.device_put(v, sh)
+        return {k: put(v) for k, v in host_batch.items()}
+
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    trainer = Trainer(tcfg, train_step, data_cfg, put_batch=put_batch)
+
+    with mesh:
+        state = sb.init_state(jax.random.PRNGKey(args.seed))
+        state = jax.device_put(state, state_sh)
+        state, start = trainer.try_restore(state, shardings=state_sh)
+        t0 = time.time()
+        state, end = trainer.run(state, start)
+        dt = time.time() - t0
+    steps_done = max(end - start, 1)
+    print(f"[train] {steps_done} steps in {dt:.1f}s "
+          f"({steps_done / dt:.2f} it/s); final metrics: "
+          f"{ {k: float(v) for k, v in trainer.metrics_history[-1].items()} }")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

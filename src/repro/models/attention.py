@@ -1,0 +1,220 @@
+"""GQA attention: RoPE, optional QKV bias, sliding-window & prefix-LM masks,
+flash-style q-chunked softmax for training/prefill, and a seq-sharded
+(flash-decoding) cache path for serving."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx, shard
+from repro.nn.params import KeyGen, boxed
+
+
+def attn_init(key, cfg: ArchConfig, *, cross: bool = False):
+    kg = KeyGen(key)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": boxed(kg(), (d, h * hd), ("embed", "heads"), "lecun", dt),
+        "wk": boxed(kg(), (d, kvh * hd), ("embed", "kv_proj"), "lecun", dt),
+        "wv": boxed(kg(), (d, kvh * hd), ("embed", "kv_proj"), "lecun", dt),
+        "wo": boxed(kg(), (h * hd, d), ("heads", "embed"), "lecun", dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = boxed(kg(), (h * hd,), ("heads",), "zeros", dt)
+        p["bk"] = boxed(kg(), (kvh * hd,), ("kv_proj",), "zeros", dt)
+        p["bv"] = boxed(kg(), (kvh * hd,), ("kv_proj",), "zeros", dt)
+    return p
+
+
+# ------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (b, s, h, hd); positions: (s,) or (b, s)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, :, None, :]                      # (1, s, 1, half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- masking
+def mask_for(kind: str, q_pos, k_pos, *, window: int = 0, prefix: int = 0):
+    """Boolean (…, q, k) mask. kinds: causal | local | prefix | full."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if kind == "full":
+        return jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    causal = kp <= qp
+    if kind == "causal":
+        return causal
+    if kind == "local":
+        return causal & (qp - kp < window)
+    if kind == "prefix":
+        return causal | (kp < prefix)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------- core attention (train)
+def _sdpa_chunk(q, k, v, mask, scale):
+    """q (b,h,qc,hd), k/v (b,h,s,hd) full-head; mask (b,1,qc,s) or (qc,s).
+
+    GQA k/v are repeated to full heads by the caller: identical FLOPs, and
+    every tensor then carries the same `heads`-over-`model` sharding. (The
+    grouped (kvh, g) einsum forces GSPMD into involuntary full resharding
+    whenever kvh < the TP extent.)"""
+    logits = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask.ndim == 2:
+        mask = mask[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", probs, v.astype(jnp.float32))
+
+
+def attention(q, k, v, *, mask_kind: str, window: int = 0, prefix: int = 0,
+              q_offset: int = 0, chunk: int = 1024, ctx: Ctx = Ctx(),
+              unroll: bool = False):
+    """q: (b, sq, h, hd); k, v: (b, sk, kvh, hd). q-chunked flash-style.
+
+    Memory per step is O(b·h·chunk·sk) instead of O(b·h·sq·sk)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    if kvh != h:                      # GQA: repeat kv to full heads
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+        k = shard(ctx, k, "batch", "seq_any", "heads", "head_dim")
+        v = shard(ctx, v, "batch", "seq_any", "heads", "head_dim")
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qt = jnp.moveaxis(q, 2, 1)        # (b, h, sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    k_pos = jnp.arange(sk)
+
+    qc = min(chunk, sq)
+    if sq % qc != 0:
+        qc = sq                        # fallback: no chunking
+    nq = sq // qc
+
+    # flash-style backward: each q-chunk is checkpointed so its (qc, sk)
+    # logits/probs are RECOMPUTED in the backward pass. Without this the
+    # scan stacks per-chunk probs as residuals — (nq, b, h, qc, sk) =
+    # the full O(n²) attention matrix, 67 × 4.3 GiB buffers at jamba
+    # train_4k (found in the dry-run buffer dump; EXPERIMENTS §Perf).
+    def chunk_compute(qi, i):
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        m = mask_for(mask_kind, q_pos, k_pos, window=window, prefix=prefix)
+        return _sdpa_chunk(qi, kt, vt, m, scale)
+
+    chunk_compute = jax.checkpoint(chunk_compute)
+
+    def body(carry, i):
+        qi = jax.lax.dynamic_slice_in_dim(qt, i * qc, qc, axis=2)
+        return carry, chunk_compute(qi, i)
+
+    if nq == 1:
+        q_pos = q_offset + jnp.arange(sq)
+        m = mask_for(mask_kind, q_pos, k_pos, window=window, prefix=prefix)
+        out = _sdpa_chunk(qt, kt, vt, m, scale)
+    else:
+        _, chunks = jax.lax.scan(body, None, jnp.arange(nq),
+                                 unroll=nq if unroll else 1)
+        out = jnp.reshape(jnp.moveaxis(chunks, 0, 2), (b, h, sq, hd))
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (b, sq, h, hd)
+
+
+def attn_apply(params, cfg: ArchConfig, ctx: Ctx, x, *, mask_kind="causal",
+               prefix: int = 0, kv_src=None, positions=None):
+    """Full attention sublayer on (b, s, d). kv_src: cross-attention source."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_src is None else kv_src
+    q = x @ params["wq"].astype(x.dtype)
+    k = src @ params["wk"].astype(x.dtype)
+    v = src @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, src.shape[1], kvh, hd)
+    v = v.reshape(b, src.shape[1], kvh, hd)
+    q = shard(ctx, q, "batch", "seq_any", "heads", "head_dim")
+    # explicit kv gather point: seq arrives `model`-sharded from the SP
+    # residual stream; kv is small (kvh ≤ h) so we gather it here, before
+    # the repeat, instead of letting GSPMD pick a transition inside SDPA.
+    k = shard(ctx, k, "batch", "seq_any", "kv_heads", "head_dim")
+    v = shard(ctx, v, "batch", "seq_any", "kv_heads", "head_dim")
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_src is None:                      # self-attention: rotate both
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+    o = attention(q, k, v, mask_kind=mask_kind, window=cfg.window,
+                  prefix=prefix, chunk=cfg.attn_chunk, ctx=ctx,
+                  unroll=cfg.unroll_inner)
+    o = shard(ctx, o, "batch", "seq_any", "heads", "head_dim")
+    return o.reshape(b, s, h * hd) @ params["wo"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- decode path
+def decode_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+    }
+
+
+def attn_decode(params, cfg: ArchConfig, ctx: Ctx, x, cache, cur_len,
+                *, mask_kind="causal", window: int = 0):
+    """One-token decode. x: (b, 1, d); cache k/v (b, S, kvh, hd) seq-sharded.
+
+    Returns (y (b,1,d), new_cache). Flash-decoding: the cache stays sharded
+    over `model` on the sequence axis; the softmax reduction crosses shards
+    (psum inserted by GSPMD)."""
+    b, _, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, h, hd)
+    k_new = (x @ params["wk"].astype(x.dtype)).reshape(b, 1, kvh, hd)
+    v_new = (x @ params["wv"].astype(x.dtype)).reshape(b, 1, kvh, hd)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(1, 1, h, hd)
+        k_new = k_new + params["bk"].astype(x.dtype).reshape(1, 1, kvh, hd)
+        v_new = v_new + params["bv"].astype(x.dtype).reshape(1, 1, kvh, hd)
+    pos = jnp.full((1,), cur_len, jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    k_new = rope(k_new, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cur_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cur_len, axis=1)
+    ck = shard(ctx, ck, "batch", "seq_kv", "kv_heads", "head_dim")
+    cv = shard(ctx, cv, "batch", "seq_kv", "kv_heads", "head_dim")
+
+    sk = ck.shape[1]
+    k_pos = jnp.arange(sk)
+    valid = k_pos <= cur_len
+    if mask_kind == "local" and window:
+        valid = valid & (cur_len - k_pos < window)
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    y = o @ params["wo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,61 @@
+"""Mesh/activation-sharding context threaded through model apply fns.
+
+Models never import mesh axes directly: they request *logical* activation
+shardings via ``shard(ctx, x, "batch", "seq", "embed")`` and the context
+maps logical names to mesh axes (None mesh = no-op, used by CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    use_pallas: Optional[bool] = None
+    decode: bool = False
+    seq_shard_resid: bool = False   # sequence-parallel residual stream
+    # KV-cache sequence sharding axes (flash decoding). For batch-1 long-
+    # context decode the idle data axes fold in here, e.g. ("data","model")
+    # = 256-way sequence sharding of a 512k cache (DESIGN §5).
+    seq_kv_axes: Tuple[str, ...] = ("model",)
+
+    def rules(self):
+        m = (self.model_axis,)
+        return {
+            "batch": self.data_axes or None,
+            "seq": m if self.seq_shard_resid else None,
+            "seq_any": None,
+            "seq_kv": self.seq_kv_axes,
+            "embed": None,
+            "heads": m,
+            "kv_heads": None,
+            "head_dim": None,
+            "ffn": m,
+            "vocab": m,
+            "expert": None,
+            "state": None,
+            "tno_channel": m,
+            None: None,
+        }
+
+
+def shard(ctx: Ctx, x: jax.Array, *axes):
+    """Apply a logical activation sharding constraint (no-op without mesh)."""
+    if ctx.mesh is None or ctx.mesh.empty:
+        return x
+    rules = ctx.rules()
+    spec = []
+    for a in axes:
+        r = rules[a]
+        spec.append(r if r is None else (r if isinstance(r, str) else tuple(r)))
+    assert len(spec) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

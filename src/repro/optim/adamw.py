@@ -1,0 +1,129 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, optional bf16
+moments (halves optimizer HBM) and optional int8 gradient compression with
+error feedback (distributed-opt trick; off by default, validated in tests).
+
+Pure-functional: ``init -> state``, ``step(state, grads, params) ->
+(new_state, new_params)``. State is a pytree mirroring params, so the
+checkpoint layer and the sharding layer treat it like a second param tree
+(moments inherit each parameter's NamedSharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+    compress_grads: bool = False     # int8 + error feedback (DP traffic /4)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    err: Any   # error-feedback residual (zeros-like unless compress_grads)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(cfg: OptConfig, params) -> OptState:
+    mdt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params)
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if cfg.compress_grads else jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params))
+    return OptState(jnp.zeros((), jnp.int32), mu, nu, err)
+
+
+# -------------------------------------------------- int8 compression (EF)
+def _quantize_int8(g: jax.Array):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, err: jax.Array):
+    """Error-feedback int8: quantize (g + carried residual), carry the
+    quantization error to the next step. Unbiased over time; the DP
+    all-reduce then moves int8 (4x less traffic)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = _quantize_int8(target)
+    deq = _dequantize(q, scale)
+    new_err = target - deq
+    return deq, new_err
+
+
+# ---------------------------------------------------------------- update
+def clip_by_global_norm(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def step(cfg: OptConfig, state: OptState, grads, params):
+    """Returns (new_state, new_params, metrics)."""
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_with_feedback, grads, state.err)
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_err = state.err
+
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.step + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moments_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    leaf3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    newp = jax.tree.map(lambda t: t[0], out, is_leaf=leaf3)
+    mu = jax.tree.map(lambda t: t[1], out, is_leaf=leaf3)
+    nu = jax.tree.map(lambda t: t[2], out, is_leaf=leaf3)
+    return OptState(count, mu, nu, new_err), newp, {"grad_norm": gnorm, "lr": lr}

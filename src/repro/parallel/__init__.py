@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (DEFAULT_RULES, ShardingRules,
+                                     rules_for_arch, spec_for, tree_shardings)

@@ -1,0 +1,114 @@
+"""Logical-axis sharding rules: map parameter logical axis names (attached
+at init by ``nn.params.boxed``) to mesh axes, MaxText-style.
+
+The default rule table realises FSDP×TP (DESIGN §5):
+
+* FSDP ("zero-3") over the composed ``("pod", "data")`` axes on the
+  d_model/"embed" dimension of every weight — parameters are *sharded at
+  rest* across the data-parallel axes and all-gathered layer-by-layer by
+  GSPMD on use (the all-gather is overlapped by the XLA latency-hiding
+  scheduler on TPU).
+* TP over ``model`` on heads/ffn/vocab/expert-ffn/tno-channel dims.
+
+Rules are (logical name) -> mesh axis or None. Arch families override
+individual entries via ``ShardingRules(overrides=...)`` — e.g. SSM inner
+projections TP-shard on "ssm_inner"; whisper MHA keeps kv_proj unsharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[str, Tuple[str, ...], None]
+
+# Default logical-name -> mesh-axis rules. "fsdp" is substituted with the
+# composed data axes of the active mesh (("data",) or ("pod", "data")).
+DEFAULT_RULES: Mapping[str, AxisVal] = {
+    # weight matrices
+    "embed": "fsdp",          # d_model dim: FSDP-sharded at rest
+    "embed_tp": "model",      # embedding table d_model dim: TP (gather by id)
+    "heads": "model",         # q heads / fused h*hd projections
+    "kv_proj": "model",       # k/v projections (kv=8 divides 16? no -> None set per-arch)
+    "mlp": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": None,           # router logits dim (tiny)
+    "ssm_inner": "model",     # mamba inner projections
+    "ssm_heads": None,
+    "tno_channel": "model",   # per-channel Toeplitz mixers: TP across channels
+    "rpe_hidden": None,       # RPE MLP hidden (tiny)
+    "layers": None,           # scanned-layer leading dim
+    None: None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Rule table bound to a mesh's axis names."""
+
+    data_axes: Tuple[str, ...] = ("data",)   # FSDP axes (composed)
+    model_axis: str = "model"
+    overrides: Tuple[Tuple[str, AxisVal], ...] = ()
+
+    def resolve(self, logical: Optional[str]) -> AxisVal:
+        table = dict(DEFAULT_RULES)
+        table.update(dict(self.overrides))
+        v = table.get(logical, None)
+        if v == "fsdp":
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        if v == "model":
+            return self.model_axis
+        return v
+
+
+def _axes_divisible(mesh: Mesh, axis: AxisVal, dim: int) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else axis
+    size = int(np.prod([mesh.shape[a] for a in names]))
+    return dim % size == 0
+
+
+def spec_for(mesh: Mesh, rules: ShardingRules, axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+    """PartitionSpec for one parameter; drops any axis whose mesh-extent
+    does not divide the dim (falls back to replication on that dim)."""
+    used = set()
+    spec = []
+    for name, dim in zip(axes, shape):
+        ax = rules.resolve(name)
+        if ax is not None:
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            if any(a in used for a in names) or not _axes_divisible(mesh, ax, dim):
+                ax = None
+            else:
+                used.update(names)
+        spec.append(ax)
+    return P(*spec)
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, axes_tree, shape_tree):
+    """Twin trees (axes, ShapeDtypeStruct or array) -> tree of NamedSharding."""
+    def f(axes, arr):
+        return NamedSharding(mesh, spec_for(mesh, rules, axes, arr.shape))
+    return jax.tree.map(f, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def rules_for_arch(cfg, mesh: Mesh) -> ShardingRules:
+    """Arch-family rule overrides (DESIGN §5 table)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    ov = []
+    model = mesh.shape.get("model", 1)
+    # kv projections: TP only if kv_heads*head_dim divides cleanly AND
+    # kv_heads >= model extent would keep head granularity; otherwise
+    # replicate kv and shard only q (standard GQA practice at kv<TP).
+    if cfg.n_kv_heads and cfg.n_kv_heads < model:
+        ov.append(("kv_proj", None))
+    return ShardingRules(data_axes=data_axes, overrides=tuple(ov))

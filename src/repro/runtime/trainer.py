@@ -1,0 +1,168 @@
+"""Training runtime: fault-tolerant step loop.
+
+Responsibilities (DESIGN §5 "1000+-node posture"):
+
+* **Checkpoint/restart** — async manifest checkpoints every
+  ``ckpt_every`` steps; on start, auto-resume from the latest committed
+  step (params + optimizer state + data cursor).
+* **Preemption** — SIGTERM/SIGINT triggers a final synchronous
+  checkpoint, then a clean exit (the cluster scheduler restarts the job
+  and it resumes exactly where it stopped).
+* **Step retry** — transient failures (injected in tests via
+  ``failure_hook``; on real fleets: ICI timeouts, host OOM) retry the
+  same step up to ``max_retries`` times. The data pipeline is stateless
+  so a retried step re-reads the identical batch.
+* **Straggler monitor** — per-step wall time EMA; steps slower than
+  ``straggler_factor``× the EMA are logged with their step index. On a
+  real fleet this feeds the scheduler's hot-spare swap; here it is a
+  hook + a counter observable by tests.
+* **NaN guard** — non-finite loss aborts the step and retries (on real
+  hardware this catches SDC / chip faults; persistent NaN raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import manifest as ckpt
+from repro.data.pipeline import DataConfig, batch_at
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    ema_alpha: float = 0.1
+    log_every: int = 10
+
+
+class StragglerMonitor:
+    """EMA step-time outlier detector."""
+
+    def __init__(self, factor: float, alpha: float):
+        self.factor = factor
+        self.alpha = alpha
+        self.ema: Optional[float] = None
+        self.flagged: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ema is not None and dt > self.factor * self.ema
+        if is_straggler:
+            self.flagged.append((step, dt, self.ema))
+        # EMA excludes outliers so one straggler doesn't mask the next
+        if not is_straggler:
+            self.ema = dt if self.ema is None else (
+                (1 - self.alpha) * self.ema + self.alpha * dt)
+        return is_straggler
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 data_cfg: DataConfig, *,
+                 put_batch: Optional[Callable] = None,
+                 failure_hook: Optional[Callable[[int, int], None]] = None,
+                 log: Callable[[str], None] = print):
+        """``train_step(state, batch) -> (state, metrics)`` must be jit'd
+        with donated state. ``put_batch(host_batch) -> device batch``
+        places host numpy onto the mesh (identity by default).
+        ``failure_hook(step, attempt)`` may raise to inject failures."""
+        self.cfg = cfg
+        self.train_step = train_step
+        self.data_cfg = data_cfg
+        self.put_batch = put_batch or (lambda b: b)
+        self.failure_hook = failure_hook
+        self.log = log
+        self.monitor = StragglerMonitor(cfg.straggler_factor, cfg.ema_alpha)
+        self.ckpt = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_ckpts)
+                     if cfg.ckpt_dir else None)
+        self._preempted = False
+        self.metrics_history: list = []
+
+    # ---------------------------------------------------------- signals
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+            self.log(f"[trainer] signal {signum}: checkpoint-and-exit requested")
+        self._old = {s: signal.signal(s, handler)
+                     for s in (signal.SIGTERM, signal.SIGINT)}
+
+    def _restore_signals(self):
+        for s, h in getattr(self, "_old", {}).items():
+            signal.signal(s, h)
+
+    # ------------------------------------------------------------- ckpt
+    def _save(self, step: int, state: Any, *, sync: bool = False):
+        if self.ckpt is None:
+            return
+        extra = {"data_step": step}
+        if sync:
+            self.ckpt.wait()
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+            ckpt.save(self.cfg.ckpt_dir, step, host, extra=extra)
+        else:
+            self.ckpt.save_async(step, state, extra=extra)
+
+    def try_restore(self, state_like: Any, shardings: Any = None):
+        """Returns (state, start_step) — (state_like, 0) if no checkpoint."""
+        if self.cfg.ckpt_dir is None:
+            return state_like, 0
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return state_like, 0
+        state, extra = ckpt.restore(self.cfg.ckpt_dir, state_like,
+                                    step=step, shardings=shardings)
+        self.log(f"[trainer] restored step {step}")
+        return state, int(extra.get("data_step", step))
+
+    # -------------------------------------------------------------- run
+    def run(self, state: Any, start_step: int = 0) -> Any:
+        self._install_signals()
+        try:
+            step = start_step
+            while step < self.cfg.total_steps and not self._preempted:
+                batch = self.put_batch(batch_at(self.data_cfg, step))
+                state, metrics = self._step_with_retry(step, state, batch)
+                self.metrics_history.append(metrics)
+                if self.cfg.log_every and step % self.cfg.log_every == 0:
+                    ms = {k: float(v) for k, v in metrics.items()}
+                    self.log(f"[trainer] step {step}: {ms}")
+                step += 1
+                if self.ckpt and step % self.cfg.ckpt_every == 0:
+                    self._save(step, state)
+            if self.ckpt:
+                self._save(step, state, sync=True)   # final / preemption save
+            return state, step
+        finally:
+            self._restore_signals()
+
+    def _step_with_retry(self, step: int, state: Any, batch: Any):
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.cfg.max_retries + 1):
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step, attempt)
+                t0 = time.perf_counter()
+                new_state, metrics = self.train_step(state, batch)
+                loss = metrics.get("loss")
+                if loss is not None and not np.isfinite(float(loss)):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                dt = time.perf_counter() - t0
+                if self.monitor.observe(step, dt):
+                    self.log(f"[trainer] straggler: step {step} took {dt:.3f}s "
+                             f"(ema {self.monitor.ema:.3f}s)")
+                return new_state, metrics
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                last_err = e
+                self.log(f"[trainer] step {step} attempt {attempt} failed: {e}")
+        raise RuntimeError(
+            f"step {step} failed after {self.cfg.max_retries + 1} attempts"
+        ) from last_err

@@ -1,0 +1,153 @@
+"""Per-Pallas-kernel allclose sweeps against the ref.py pure-jnp oracles.
+
+Every kernel runs in interpret mode (kernel body executed in Python on
+CPU) across shape × dtype sweeps; tolerances are fp32-accumulation level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ski import make_inducing
+from repro.kernels import ops, ref
+from tests.conftest import assert_allclose
+
+
+def _x(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ------------------------------------------------------------- short conv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,d,m", [
+    (1, 256, 128, 4), (2, 512, 128, 8), (2, 256, 256, 16), (1, 1024, 128, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_short_conv_matches_ref(b, n, d, m, causal, dtype):
+    x = _x(0, (b, n, d), dtype)
+    filt = _x(1, (d, m), dtype)
+    got = ops.short_conv(x, filt, causal, use_pallas=True)
+    want = ref.short_conv_ref(x, filt, causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_short_conv_is_banded_toeplitz():
+    """The conv equals multiplication by an m-diagonal Toeplitz matrix —
+    the paper's T_sparse definition (§3.2)."""
+    b, n, d, m = 1, 64, 4, 8
+    x = _x(0, (b, n, d), jnp.float32)
+    filt = _x(1, (d, m), jnp.float32)
+    y = ref.short_conv_ref(x, filt, causal=False)
+    left = m // 2
+    i = jnp.arange(n)
+    lag = i[:, None] - i[None, :]
+    k_idx = lag + left
+    valid = (k_idx >= 0) & (k_idx < m)
+    t_sp = jnp.where(valid[None], filt[:, jnp.clip(k_idx, 0, m - 1)], 0.0)
+    want = jnp.einsum("dnm,bmd->bnd", t_sp, x)
+    assert_allclose(y, want)
+
+
+# --------------------------------------------------------- interp matvecs
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,d,r", [
+    (1, 256, 128, 9), (2, 512, 128, 33), (2, 512, 256, 65), (1, 2048, 128, 17),
+])
+def test_interp_reduce_matches_ref(b, n, d, r, dtype):
+    x = _x(0, (b, n, d), dtype)
+    idx_lo, w_lo, h = make_inducing(n, r)
+    got = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=True)
+    want = ref.interp_reduce_ref(x, idx_lo, w_lo, r)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,n,d,r", [
+    (1, 256, 128, 9), (2, 512, 128, 33), (1, 1024, 256, 65),
+])
+def test_interp_expand_matches_ref(b, n, d, r, dtype):
+    z = _x(0, (b, r, d), dtype)
+    idx_lo, w_lo, h = make_inducing(n, r)
+    got = ops.interp_expand(z, idx_lo, w_lo, use_pallas=True)
+    want = ref.interp_expand_ref(z, idx_lo, w_lo)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_interp_matrices_match_dense_W():
+    """Pallas hat-weight regeneration == materialised W (oracle)."""
+    n, r = 512, 17
+    idx_lo, w_lo, h = make_inducing(n, r)
+    w = ref.dense_interp_matrix(idx_lo, w_lo, r)                 # (n, r)
+    x = _x(0, (1, n, 128), jnp.float32)
+    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=True)
+    assert_allclose(z[0], w.T @ x[0], rtol=1e-3, atol=1e-3)
+    zz = _x(1, (1, r, 128), jnp.float32)
+    y = ops.interp_expand(zz, idx_lo, w_lo, use_pallas=True)
+    assert_allclose(y[0], w @ zz[0], rtol=1e-3, atol=1e-3)
+
+
+def test_interp_W_rows_sum_to_one():
+    """Interpolation weights are a partition of unity (each row of W sums
+    to 1) — required for the SKI approximation to preserve constants."""
+    n, r = 300, 11
+    idx_lo, w_lo, h = make_inducing(n, r)
+    w = ref.dense_interp_matrix(idx_lo, w_lo, r)
+    assert_allclose(w.sum(axis=1), np.ones(n))
+
+
+# --------------------------------------------------------------- SSD scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bt,n,h,p,g,s,chunk", [
+    (1, 64, 2, 8, 1, 8, 16), (2, 128, 4, 16, 2, 16, 32),
+    (1, 96, 4, 8, 4, 8, 32),  # n not multiple of chunk
+])
+def test_ssd_chunked_matches_sequential(bt, n, h, p, g, s, chunk, dtype):
+    x = _x(0, (bt, n, h, p), dtype)
+    dt = jax.nn.softplus(_x(1, (bt, n, h), jnp.float32))
+    a = -jnp.exp(0.1 * _x(2, (h,), jnp.float32))
+    b = _x(3, (bt, n, g, s), dtype)
+    c = _x(4, (bt, n, g, s), dtype)
+    dsk = jnp.ones((h,))
+    want = ref.ssd_scan_ref(x, dt, a, b, c, dsk)
+    got = ops.ssd_scan(x, dt, a, b, c, dsk, chunk=chunk, use_pallas=False)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bt,n,h,p,g,s,chunk", [
+    (1, 64, 2, 8, 1, 8, 16), (2, 128, 4, 16, 2, 16, 32),
+])
+def test_ssd_pallas_matches_sequential(bt, n, h, p, g, s, chunk):
+    x = _x(0, (bt, n, h, p), jnp.float32)
+    dt = jax.nn.softplus(_x(1, (bt, n, h), jnp.float32))
+    a = -jnp.exp(0.1 * _x(2, (h,), jnp.float32))
+    b = _x(3, (bt, n, g, s), jnp.float32)
+    c = _x(4, (bt, n, g, s), jnp.float32)
+    dsk = jnp.ones((h,))
+    want = ref.ssd_scan_ref(x, dt, a, b, c, dsk)
+    got = ops.ssd_scan(x, dt, a, b, c, dsk, chunk=chunk, use_pallas=True)
+    assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_decode_step_matches_scan():
+    """Serving recurrence == one step of the training scan."""
+    from repro.kernels.ssd_chunked import ssd_decode_step
+    bt, n, h, p, g, s = 1, 8, 2, 4, 1, 8
+    x = _x(0, (bt, n, h, p), jnp.float32)
+    dt = jax.nn.softplus(_x(1, (bt, n, h), jnp.float32))
+    a = -jnp.exp(0.1 * _x(2, (h,), jnp.float32))
+    b = _x(3, (bt, n, g, s), jnp.float32)
+    c = _x(4, (bt, n, g, s), jnp.float32)
+    dsk = 0.5 * jnp.ones((h,))
+    want = ref.ssd_scan_ref(x, dt, a, b, c, dsk)
+    state = jnp.zeros((bt, h, p, s), jnp.float32)
+    ys = []
+    for t in range(n):
+        state, y = ssd_decode_step(state, x[:, t], dt[:, t], a, b[:, t],
+                                   c[:, t], dsk)
+        ys.append(y)
+    got = jnp.stack(ys, axis=1)
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,139 @@
+"""Hypothesis property tests on the system's core invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import hilbert, toeplitz
+from repro.core.ski import make_inducing
+from repro.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@st.composite
+def toeplitz_case(draw):
+    n = draw(st.integers(2, 96))
+    d = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    return n, d, seed
+
+
+@given(toeplitz_case())
+def test_toeplitz_matvec_linearity_and_oracle(case):
+    n, d, seed = case
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t = jax.random.normal(k1, (d, 2 * n - 1))
+    x = jax.random.normal(k2, (d, n))
+    y = jax.random.normal(k3, (d, n))
+    # oracle equivalence
+    dense = toeplitz.dense_toeplitz(t, n)
+    np.testing.assert_allclose(
+        np.asarray(toeplitz.toeplitz_matvec(t, x)),
+        np.asarray(jnp.einsum("dnm,dm->dn", dense, x)),
+        rtol=2e-3, atol=2e-3)
+    # linearity
+    lhs = toeplitz.toeplitz_matvec(t, 2.0 * x + y)
+    rhs = 2.0 * toeplitz.toeplitz_matvec(t, x) + toeplitz.toeplitz_matvec(t, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(2, 128), st.integers(0, 2 ** 16))
+def test_causal_spectrum_always_causal(n, seed):
+    khat = jax.random.normal(jax.random.PRNGKey(seed), (2, n + 1))
+    spec = hilbert.causal_spectrum(khat)
+    k_time = np.asarray(jnp.fft.irfft(spec, n=2 * n, axis=-1))
+    assert np.abs(k_time[:, n + 1:]).max() < 1e-4 * max(
+        np.abs(k_time).max(), 1.0)
+
+
+@given(st.integers(2, 64), st.integers(0, 2 ** 16))
+def test_hilbert_annihilates_constants(n, seed):
+    """H{const} == 0 (DC is in the kernel of the Hilbert transform)."""
+    c = float(jax.random.normal(jax.random.PRNGKey(seed), ()))
+    u = jnp.full((2 * n,), c)
+    h = np.asarray(hilbert.discrete_hilbert(u))
+    assert np.abs(h).max() < 1e-4 * (abs(c) + 1.0)
+
+
+@given(st.integers(3, 65), st.integers(2, 512))
+def test_inducing_points_cover_and_interpolate(r, n):
+    hypothesis.assume(r <= n)
+    idx_lo, w_lo, h = make_inducing(n, r)
+    idx, w = np.asarray(idx_lo), np.asarray(w_lo)
+    assert idx.min() >= 0 and idx.max() <= r - 2
+    assert np.all(w >= -1e-6) and np.all(w <= 1 + 1e-6)
+    # W reproduces linear functions on the grid (degree-1 precision, up
+    # to fp32 rounding of the irrational spacing h — values scale with n)
+    wmat = np.asarray(ref.dense_interp_matrix(idx_lo, w_lo, r))
+    grid = np.arange(r) * h
+    lin = 3.0 * grid - 1.0
+    np.testing.assert_allclose(wmat @ lin, 3.0 * np.arange(n) - 1.0,
+                               rtol=1e-3, atol=1e-3 * n)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([16, 33, 64]),
+       st.sampled_from([4, 8]))
+def test_short_conv_shift_equivariance(seed, n, m):
+    """Causal depthwise conv commutes with time shift (Toeplitz property)."""
+    d = 4
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, n, d))
+    filt = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, m))
+    y = ref.short_conv_ref(x, filt, causal=True)
+    xs = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))[:, :n]     # shift right 3
+    ys = ref.short_conv_ref(xs, filt, causal=True)
+    np.testing.assert_allclose(np.asarray(ys[:, 3:]), np.asarray(y[:, :-3]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16))
+def test_optimizer_step_is_deterministic(seed):
+    from repro.optim import adamw
+    cfg = adamw.OptConfig()
+    params = {"w": jax.random.normal(jax.random.PRNGKey(seed), (8,))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (8,))}
+    s1, p1, _ = adamw.step(cfg, adamw.init(cfg, params), grads, params)
+    s2, p2, _ = adamw.step(cfg, adamw.init(cfg, params), grads, params)
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(1, 4))
+def test_data_rows_independent_of_host_layout(step, h1, h2):
+    """The same global row produces identical tokens under any host split
+    whose host_batch divides it — the elastic-restore data invariant."""
+    from repro.data.pipeline import DataConfig, batch_at
+    gb = 8
+    hypothesis.assume(gb % h1 == 0 and gb % h2 == 0)
+    base = dict(vocab=32, seq_len=16, global_batch=gb, seed=1)
+    a = np.concatenate([
+        batch_at(DataConfig(**base, host_id=i, num_hosts=h1), step)["tokens"]
+        for i in range(h1)])
+    b = np.concatenate([
+        batch_at(DataConfig(**base, host_id=i, num_hosts=h2), step)["tokens"]
+        for i in range(h2)])
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from(["tno", "fd"]))
+def test_causal_mixers_never_leak_future(seed, variant):
+    from repro.core import tno
+    from repro.nn.params import unbox
+    cfg = tno.TNOConfig(d=4, variant=variant, causal=True, rank=8,
+                        filter_size=4)
+    params, _ = unbox(tno.tno_init(jax.random.PRNGKey(seed), cfg))
+    n = 24
+    cut = n // 2
+    x1 = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, n, 4))
+    x2 = x1.at[:, cut:].add(
+        jax.random.normal(jax.random.PRNGKey(seed + 2), (1, n - cut, 4)))
+    y1 = tno.tno_apply(params, cfg, x1)
+    y2 = tno.tno_apply(params, cfg, x2)
+    np.testing.assert_allclose(np.asarray(y1[:, :cut]),
+                               np.asarray(y2[:, :cut]),
+                               rtol=5e-3, atol=5e-3)
