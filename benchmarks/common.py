@@ -26,5 +26,21 @@ def time_fn(fn, *args, iters=5, warmup=2):
     return float(np.median(ts))
 
 
+def time_fns_interleaved(fns, *args, iters=7, warmup=2):
+    """Best wall seconds per call for several variants, measured in
+    alternating rounds (A B C, A B C, ...) with min-of-rounds — robust to
+    the load drift on shared hosts that sequential medians are not."""
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    best = [float("inf")] * len(fns)
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
 def report(name: str, value, unit: str, derived: str = ""):
     print(f"{name},{value:.6g},{unit},{derived}")

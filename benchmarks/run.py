@@ -2,28 +2,46 @@
 ``name,value,unit,derived-claim``.
 
   bench_tno_variants        Figure 1 (+par.5.1/5.2 speed ratios)
-  bench_ski_components      Figure 11 (sparse vs low-rank split)
+  bench_ski_components      Figure 11 (sparse vs low-rank split) + the
+                            fused-vs-unfused SKI pipeline tracking
+                            (writes BENCH_ski_fused.json at the repo root)
   bench_appendix_b          Appendix B (causal-SKI negative result)
   bench_pretrain_parity     Table 1 stand-in (causal quality parity)
   bench_lra_style           Table 2 stand-in (long-range classification)
   bench_length_extrapolation Fig 7a + par.3.2.2 (inverse warp / FD grids)
   bench_decay_classes       Appendix E.3 (smoothness => decay, quantified)
 
+``--smoke`` runs a fast perf-regression gate (CI): only the fused-vs-
+unfused SKI comparison at n=2048 with reduced iterations.
+
 Roofline terms for the production mesh come from the dry-run
 (repro.launch.dryrun / results/*.json), not from this harness.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset: fused-vs-unfused SKI gate only")
+    args = ap.parse_args()
+
+    print("name,value,unit,derived")
+    if args.smoke:
+        from benchmarks import bench_ski_components
+        t0 = time.time()
+        bench_ski_components.run(smoke=True)
+        print(f"ski_components/_elapsed,{time.time() - t0:.1f},s,")
+        return
+
     from benchmarks import (bench_appendix_b, bench_complexity,
                             bench_decay_classes, bench_length_extrapolation,
                             bench_lra_style, bench_pretrain_parity,
                             bench_ski_components, bench_tno_variants)
-    print("name,value,unit,derived")
     modules = [
         ("complexity", bench_complexity),
         ("tno_variants", bench_tno_variants),

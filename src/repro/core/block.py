@@ -7,7 +7,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.tno import TNOConfig, tno_apply, tno_init
+from repro.core.tno import TNOConfig, tno_apply, tno_init, tno_plan
 from repro.nn.layers import dense, dense_init, rmsnorm, rmsnorm_init
 from repro.nn.params import KeyGen
 
@@ -37,7 +37,9 @@ def gtu_apply(params, cfg: TNNBlockConfig, x: jax.Array) -> jax.Array:
     act = ACTS[cfg.act]
     u = act(dense(params["wu"], x))
     v = act(dense(params["wv"], x))
-    o = tno_apply(params["tno"], cfg.tno, u) * v
+    # gram coefficients / kernel spectrum once per forward, not per op
+    plan = tno_plan(params["tno"], cfg.tno, x.shape[1])
+    o = tno_apply(params["tno"], cfg.tno, u, plan=plan) * v
     return dense(params["wo"], o)
 
 

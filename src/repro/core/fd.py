@@ -13,6 +13,7 @@ fewer FFT than the baseline TNO.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +50,16 @@ def fd_init(key, cfg: FDConfig):
     return {"rpe": mlp_rpe_init(key, _rpe_cfg(cfg))}
 
 
+@functools.lru_cache(maxsize=64)
+def _omega_grid(n: int, feature: str) -> jax.Array:
+    """rfft frequency grid (param-independent): memoised so all FD layers
+    of a model share one copy instead of rebuilding it per block (concrete
+    even when first built under a jit trace)."""
+    with jax.ensure_compile_time_eval():
+        omega = jnp.arange(n + 1, dtype=jnp.float32) / n  # omega/pi in [0,1]
+        return jnp.cos(jnp.pi * omega) if feature == "cos" else omega
+
+
 def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
     """Evaluate the (d, n+1) complex frequency response on the rfft grid.
 
@@ -56,9 +67,7 @@ def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
     sequences — in frequency, resolution scales with signal length, so
     length extrapolation is grid refinement, not model extrapolation.
     """
-    omega = jnp.arange(n + 1, dtype=jnp.float32) / n  # omega/pi in [0, 1]
-    if cfg.feature == "cos":
-        omega = jnp.cos(jnp.pi * omega)
+    omega = _omega_grid(int(n), cfg.feature)
     out = mlp_rpe_apply(params["rpe"], _rpe_cfg(cfg), omega)  # (n+1, width)
     if cfg.causal:
         khat_real = out.T                                     # (d, n+1)
@@ -69,10 +78,13 @@ def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
     return re + 1j * (im * mask)
 
 
-def fd_tno_apply(params, cfg: FDConfig, x: jax.Array) -> jax.Array:
-    """x: (b, n, d) -> (b, n, d) via one rfft/irfft pair on x only."""
+def fd_tno_apply(params, cfg: FDConfig, x: jax.Array,
+                 khat: jax.Array | None = None) -> jax.Array:
+    """x: (b, n, d) -> (b, n, d) via one rfft/irfft pair on x only.
+    ``khat`` — optional precomputed :func:`kernel_spectrum` (tno_plan)."""
     b, n, d = x.shape
-    khat = kernel_spectrum(params, cfg, n)                    # (d, n+1)
+    if khat is None:
+        khat = kernel_spectrum(params, cfg, n)                # (d, n+1)
     xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)  # (b,n+1,d)
     y = jnp.fft.irfft(xhat * khat.T[None], n=2 * n, axis=1)[:, :n]
     return y.astype(x.dtype)

@@ -13,11 +13,23 @@
 Total: O(n + r log r) — the paper's mathematical complexity, which their
 PyTorch implementation could not reach (sparse-tensor reshape overhead);
 the TPU port does (DESIGN §3 item 1).
+
+Execution pipeline (default, ``SKIConfig.fused=True``): the **two-pass
+fused** form — pass 1 ``interp_reduce`` (z = Wᵀx), pass 2 one kernel
+fusing the dense r×r Gram contraction, the interp expansion and the short
+conv with a single output write (kernels/ski_fused.py). The 4-kernel
+unfused form (FFT Gram matvec) remains for r > 512 / oversized Gram and as
+the ``fused=False`` benchmark baseline.
+
+Forward-invariant pieces (inducing geometry, warped lag grid, Gram
+coefficients / dense Gram) are grouped in a :func:`ski_plan`, built once
+per layer per forward by core/block.py — not rebuilt per op — and the
+param-independent grids are additionally memoised process-wide.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,10 @@ from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply, interp_rpe_init,
 from repro.kernels import ops
 from repro.nn.params import KeyGen, boxed
 
+# fused pass-2 eligibility: direct dense Gram only while it stays small
+_FUSED_RANK_MAX = 512
+_FUSED_GRAM_BYTES_MAX = 64 << 20
+
 
 @dataclasses.dataclass(frozen=True)
 class SKIConfig:
@@ -37,18 +53,35 @@ class SKIConfig:
     lam: float = 0.99         # inverse-time-warp decay
     grid_size: int = 129      # interp-RPE grid nodes on [-1,1]
     use_pallas: bool | None = None
+    fused: bool = True        # two-pass fused pipeline (False: 4 kernels)
 
 
+@functools.lru_cache(maxsize=128)
 def make_inducing(n: int, r: int):
-    """Uniform inducing points on [0, n-1]; returns (idx_lo, w_lo, h)."""
-    h = (n - 1) / (r - 1)
-    i = jnp.arange(n, dtype=jnp.float32)
-    f = i / h
-    lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
-    # clamp: fp32 rounding of the irrational spacing h can push the
-    # boundary weight a few ulp outside [0, 1]
-    w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)
+    """Uniform inducing points on [0, n-1]; returns (idx_lo, w_lo, h).
+    Memoised: the geometry depends only on (n, r), so all layers of a model
+    (and every forward) share one copy instead of rebuilding it per block.
+    ``ensure_compile_time_eval`` keeps the cached values concrete even when
+    the first call happens inside a jit trace."""
+    with jax.ensure_compile_time_eval():
+        h = (n - 1) / (r - 1)
+        i = jnp.arange(n, dtype=jnp.float32)
+        f = i / h
+        lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
+        # clamp: fp32 rounding of the irrational spacing h can push the
+        # boundary weight a few ulp outside [0, 1]
+        w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)
     return lo, w_lo, h
+
+
+@functools.lru_cache(maxsize=128)
+def _warped_lag_grid(r: int, h: float, lam: float):
+    """Warped inducing lags x(t) = sign(t) λ^|t| at lags -(r-1)h..(r-1)h —
+    param-independent, shared across layers/forwards (memoised; concrete
+    even when first built under a jit trace)."""
+    with jax.ensure_compile_time_eval():
+        lag = jnp.arange(-(r - 1), r, dtype=jnp.float32) * h
+        return inverse_time_warp(lag, lam)
 
 
 def ski_init(key, cfg: SKIConfig):
@@ -61,32 +94,67 @@ def ski_init(key, cfg: SKIConfig):
 
 def inducing_gram_coeffs(params, cfg: SKIConfig, r: int, h: float):
     """(d, 2r-1) Toeplitz coefficients of A at warped inducing lags."""
-    lag = jnp.arange(-(r - 1), r, dtype=jnp.float32) * h
-    x = inverse_time_warp(lag, cfg.lam)
+    x = _warped_lag_grid(int(r), float(h), float(cfg.lam))
     vals = interp_rpe_apply(params["rpe"], InterpRPEConfig(cfg.d, cfg.grid_size), x)
     return vals.T  # (d, 2r-1)
 
 
-def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
-                  causal: bool = False) -> jax.Array:
-    """x: (b, n, d) -> (b, n, d). Bidirectional by default (paper trains
-    SKI only bidirectionally; the causal flag exists for the Appendix-B
-    negative-result benchmark via core.causal_ski)."""
-    b, n, d = x.shape
+def fused_eligible(cfg: SKIConfig, r: int) -> bool:
+    return (cfg.fused and r <= _FUSED_RANK_MAX
+            and cfg.d * r * r * 4 <= _FUSED_GRAM_BYTES_MAX)
+
+
+def ski_plan(params, cfg: SKIConfig, n: int, causal: bool = False) -> dict:
+    """Precompute everything that is invariant across ops within a forward:
+    inducing geometry, Gram coefficients, and (fused path) the dense
+    per-channel Gram. Built once per layer per forward (core/block.py);
+    serving can additionally reuse it across decode steps of equal n."""
     r = min(cfg.rank, n)
     idx_lo, w_lo, h = make_inducing(n, r)
-
-    # sparse component: short depthwise conv
-    y_sparse = ops.short_conv(x, params["filt"], causal,
-                              use_pallas=cfg.use_pallas)
-
-    # low-rank component: W A W^T x
-    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)
-    a_coef = inducing_gram_coeffs(params, cfg, r, h)          # (d, 2r-1)
+    a_coef = inducing_gram_coeffs(params, cfg, r, h)            # (d, 2r-1)
     if causal:
         a_coef = toeplitz.causal_mask_coeffs(a_coef, r)
+    plan = {"r": r, "h": h, "idx_lo": idx_lo, "w_lo": w_lo,
+            "causal": causal, "a_coef": a_coef}
+    if fused_eligible(cfg, r):
+        plan["a_dense"] = toeplitz.dense_toeplitz(a_coef, r)    # (d, r, r)
+    return plan
+
+
+def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
+                  causal: bool = False, plan: dict | None = None) -> jax.Array:
+    """x: (b, n, d) -> (b, n, d). Bidirectional by default (paper trains
+    SKI only bidirectionally; the causal flag exists for the Appendix-B
+    negative-result benchmark via core.causal_ski).
+
+    ``plan`` — optional precomputed :func:`ski_plan` (must have been built
+    with the same ``causal`` flag); computed here when absent.
+    """
+    b, n, d = x.shape
+    if plan is None:
+        plan = ski_plan(params, cfg, n, causal)
+    # a stale plan (wrong masking or sequence length) silently computes a
+    # different operator — reject it here rather than return wrong numbers
+    if plan["causal"] != causal or plan["idx_lo"].shape[0] != n:
+        raise ValueError(
+            f"plan mismatch: built for causal={plan['causal']}, "
+            f"n={plan['idx_lo'].shape[0]}; called with causal={causal}, n={n}")
+    r, idx_lo, w_lo = plan["r"], plan["idx_lo"], plan["w_lo"]
+
+    # pass 1: interp reduction z = W^T x while tiles are VMEM-resident
+    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)
+
+    if "a_dense" in plan:
+        # pass 2 (fused): gram + expand + short conv, single output write
+        y = ops.ski_fused_pass2(x, z, plan["a_dense"], params["filt"],
+                                causal, use_pallas=cfg.use_pallas)
+        return y.astype(x.dtype)
+
+    # unfused 4-kernel fallback (r > 512 / fused disabled): FFT Gram matvec
+    y_sparse = ops.short_conv(x, params["filt"], causal,
+                              use_pallas=cfg.use_pallas)
     zt = jnp.swapaxes(z, 1, 2)                                 # (b, d, r)
-    zt = toeplitz.toeplitz_matvec(a_coef[None], zt)            # A z
+    zt = toeplitz.toeplitz_matvec(plan["a_coef"][None], zt)    # A z
     z2 = jnp.swapaxes(zt, 1, 2)                                # (b, r, d)
     y_low = ops.interp_expand(z2, idx_lo, w_lo, use_pallas=cfg.use_pallas)
     return (y_sparse + y_low).astype(x.dtype)

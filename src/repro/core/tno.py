@@ -34,6 +34,7 @@ class TNOConfig:
     filter_size: int = 32
     grid_size: int = 129
     use_pallas: bool | None = None
+    fused: bool = True          # SKI: two-pass fused pipeline
 
     def fd_cfg(self) -> fd.FDConfig:
         return fd.FDConfig(self.d, self.causal, self.rpe_hidden,
@@ -41,7 +42,7 @@ class TNOConfig:
 
     def ski_cfg(self) -> ski.SKIConfig:
         return ski.SKIConfig(self.d, self.rank, self.filter_size, self.lam,
-                             self.grid_size, self.use_pallas)
+                             self.grid_size, self.use_pallas, self.fused)
 
     def mlp_cfg(self) -> MLPRPEConfig:
         return MLPRPEConfig(self.d, self.rpe_hidden, self.rpe_layers,
@@ -70,15 +71,32 @@ def baseline_coeffs(params, cfg: TNOConfig, n: int) -> jax.Array:
     return coef
 
 
-def tno_apply(params, cfg: TNOConfig, x: jax.Array) -> jax.Array:
-    """Unified TNO: x (b, n, d) -> (b, n, d)."""
+def tno_plan(params, cfg: TNOConfig, n: int) -> dict:
+    """Variant-specific forward-invariant precomputation: the SKI inducing
+    geometry + Gram, the FD kernel spectrum, or the baseline coefficient
+    vector. Built once per layer per forward (core/block.py) so the RPE /
+    spectrum evaluation is not repeated per op — serving reuses it across
+    decode steps of equal n."""
     if cfg.variant == "fd":
-        return fd.fd_tno_apply(params, cfg.fd_cfg(), x)
+        return {"khat": fd.kernel_spectrum(params, cfg.fd_cfg(), n)}
     if cfg.variant == "ski":
-        return ski.ski_tno_apply(params, cfg.ski_cfg(), x, causal=cfg.causal)
+        return ski.ski_plan(params, cfg.ski_cfg(), n, causal=cfg.causal)
+    return {"coef": baseline_coeffs(params, cfg, n)}
+
+
+def tno_apply(params, cfg: TNOConfig, x: jax.Array,
+              plan: dict | None = None) -> jax.Array:
+    """Unified TNO: x (b, n, d) -> (b, n, d). ``plan`` — optional
+    :func:`tno_plan` for the same (params, cfg, n)."""
+    if cfg.variant == "fd":
+        return fd.fd_tno_apply(params, cfg.fd_cfg(), x,
+                               khat=plan["khat"] if plan else None)
+    if cfg.variant == "ski":
+        return ski.ski_tno_apply(params, cfg.ski_cfg(), x, causal=cfg.causal,
+                                 plan=plan)
     # baseline
     n = x.shape[1]
-    coef = baseline_coeffs(params, cfg, n)
+    coef = plan["coef"] if plan else baseline_coeffs(params, cfg, n)
     xt = jnp.swapaxes(x, 1, 2)                       # (b, d, n)
     yt = toeplitz.toeplitz_matvec(coef[None], xt)
     return jnp.swapaxes(yt, 1, 2).astype(x.dtype)

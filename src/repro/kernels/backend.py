@@ -1,0 +1,245 @@
+"""Backend selection, block-size autotuning, and ragged-shape policy for
+the Pallas kernels.
+
+This module is the single place that decides *how* a kernel runs:
+
+* **Platform detection** — ``platform()`` reports the active JAX backend.
+  On TPU the Pallas kernels compile (``interpret=False``); everywhere else
+  they run in interpret mode (kernel body executed by the Pallas
+  interpreter), and the jnp reference oracles are the default execution
+  path (``use_pallas`` resolves to False unless forced).
+* **Block sizing** — ``get_blocks`` returns (bn, bd) tile sizes for a
+  (kernel, n, d, dtype, platform) key: first from the on-disk autotune
+  cache, else (when autotuning is enabled and the inputs are concrete) by
+  timing a small candidate sweep, else from a shape-fitted heuristic.
+* **Ragged shapes** — ``fit_block`` / ``round_up`` let callers pick tiles
+  for n/d that do *not* divide the defaults; kernels zero-pad up to the
+  tile multiple and slice the result (zero padding is semantics-preserving
+  for every kernel in this package: conv uses zero boundary conditions and
+  the interp/gram contractions are linear).
+
+Environment knobs (also documented in :mod:`repro.kernels.ops`):
+
+* ``REPRO_USE_PALLAS``    — "1"/"0" force the Pallas/reference path;
+  "auto" (default) selects Pallas exactly on TPU.
+* ``REPRO_PALLAS_INTERPRET`` — "1"/"0" force interpret/compiled;
+  "auto" (default) compiles exactly on TPU.
+* ``REPRO_AUTOTUNE``      — "1" enables the timing sweep on cache miss.
+* ``REPRO_AUTOTUNE_CACHE`` — cache file path
+  (default ``~/.cache/repro/autotune.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+
+_ENV_BACKEND = "REPRO_USE_PALLAS"
+_ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+_ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+_FORCED_DEFAULT: bool | None = None     # set_default_use_pallas override
+
+
+# ------------------------------------------------------------- dispatch
+def platform() -> str:
+    """Active JAX backend: "cpu" | "tpu" | "gpu"."""
+    return jax.default_backend()
+
+
+def set_default_use_pallas(flag: bool | None) -> None:
+    """Programmatic override of the global default (None = back to auto)."""
+    global _FORCED_DEFAULT
+    _FORCED_DEFAULT = None if flag is None else bool(flag)
+
+
+def use_pallas_default() -> bool:
+    if _FORCED_DEFAULT is not None:
+        return _FORCED_DEFAULT
+    v = os.environ.get(_ENV_BACKEND, "auto").lower()
+    if v in ("1", "true"):
+        return True
+    if v in ("0", "false"):
+        return False
+    return platform() == "tpu"
+
+
+def resolve_use_pallas(flag) -> bool:
+    """Explicit per-call flag wins; None falls back to the global policy."""
+    return use_pallas_default() if flag is None else bool(flag)
+
+
+def resolve_interpret(flag=None) -> bool:
+    """Compiled Pallas only on TPU unless explicitly forced."""
+    if flag is not None:
+        return bool(flag)
+    v = os.environ.get(_ENV_INTERPRET, "auto").lower()
+    if v in ("1", "true"):
+        return True
+    if v in ("0", "false"):
+        return False
+    return platform() != "tpu"
+
+
+# ---------------------------------------------------------- shape fitting
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def lane_unit(interpret: bool) -> int:
+    """Last-dim (lane) padding unit: 128 on compiled TPU, 8 elsewhere."""
+    return 8 if interpret else 128
+
+
+def fit_block(size: int, target: int, unit: int = 8) -> int:
+    """Largest-balanced block <= target for a possibly-ragged dimension.
+
+    Splits ``size`` into ceil(size/target) near-equal tiles rounded up to
+    ``unit`` so padding waste stays < unit per tile (e.g. n=300, target=256
+    -> bn=152, padded n=304 — not 512)."""
+    if size <= target:
+        return round_up(size, unit)
+    tiles = -(-size // target)
+    return round_up(-(-size // tiles), unit)
+
+
+# --------------------------------------------------------- autotune cache
+_DEFAULT_TARGETS = {
+    # kernel -> (bn target, bd target) heuristic starting point
+    "short_conv": (256, 128),
+    "interp_reduce": (256, 128),
+    "interp_expand": (256, 128),
+    "ski_fused": (256, 128),
+}
+
+_cache_lock = threading.Lock()
+_cache_data: dict | None = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        _ENV_CACHE,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+def _load_cache() -> dict:
+    global _cache_data
+    if _cache_data is None:
+        try:
+            with open(cache_path()) as f:
+                data = json.load(f)
+            _cache_data = data.get("entries", {}) if isinstance(data, dict) else {}
+        except (OSError, ValueError):
+            _cache_data = {}
+    return _cache_data
+
+
+def _save_cache() -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"version": 1, "entries": _cache_data}, f, indent=1,
+                      sort_keys=True)
+    except OSError:
+        pass                      # read-only FS: tuning just isn't persisted
+
+
+def clear_cache(memory_only: bool = False) -> None:
+    """Drop the in-memory cache (tests); optionally keep the file."""
+    global _cache_data
+    with _cache_lock:
+        _cache_data = None
+        if not memory_only:
+            try:
+                os.remove(cache_path())
+            except OSError:
+                pass
+
+
+def _key(kernel: str, n: int, d: int, dtype, interpret: bool,
+         extra: str = "") -> str:
+    mode = "interpret" if interpret else "compiled"
+    tail = f"|{extra}" if extra else ""
+    return (f"{kernel}|n={n}|d={d}|{jax.numpy.dtype(dtype).name}"
+            f"|{platform()}|{mode}{tail}")
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(_ENV_AUTOTUNE, "0").lower() in ("1", "true")
+
+
+def is_concrete(*arrays) -> bool:
+    """True when no argument is a tracer (so timing sweeps are possible)."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def heuristic_blocks(kernel: str, n: int, d: int, interpret: bool) -> tuple[int, int]:
+    tn, td = _DEFAULT_TARGETS.get(kernel, (256, 128))
+    return fit_block(n, tn, 8), fit_block(d, td, lane_unit(interpret))
+
+
+def clamp_blocks(bn: int, bd: int, n: int, d: int,
+                 interpret: bool) -> tuple[int, int]:
+    """Shrink cached/requested blocks to the actual array, preserving the
+    sublane (8) / lane (128 compiled, 8 interpret) padding units — shared
+    by every kernel wrapper so the clamp policy lives in one place."""
+    return (min(bn, round_up(n, 8)),
+            min(bd, round_up(d, lane_unit(interpret))))
+
+
+def _candidates(n: int, d: int, interpret: bool):
+    ud = lane_unit(interpret)
+    bns = sorted({fit_block(n, t, 8) for t in (128, 256, 512)})
+    bds = sorted({fit_block(d, t, ud) for t in (128, 256)})
+    return [(bn, bd) for bn in bns for bd in bds]
+
+
+def _time_call(fn, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def get_blocks(kernel: str, n: int, d: int, dtype, interpret: bool,
+               tune_call=None, extra: str = "") -> tuple[int, int]:
+    """(bn, bd) for a kernel instance: cache > autotune sweep > heuristic.
+
+    ``tune_call(bn, bd)`` must execute the kernel with those blocks and
+    return its output; pass it only when the inputs are concrete. ``extra``
+    carries further legality/footprint parameters into the cache key
+    (e.g. filter width m for short_conv — bn >= m — and rank r for the
+    Gram-carrying fused kernel). The sweep runs once per (kernel, shape,
+    dtype, platform, mode, extra) and persists to :func:`cache_path`.
+    """
+    key = _key(kernel, n, d, dtype, interpret, extra)
+    with _cache_lock:
+        hit = _load_cache().get(key)
+    if hit:
+        return int(hit["bn"]), int(hit["bd"])
+    if tune_call is not None and autotune_enabled():
+        best, best_t = None, float("inf")
+        for bn, bd in _candidates(n, d, interpret):
+            try:
+                t = _time_call(lambda: tune_call(bn, bd))
+            except Exception:
+                continue
+            if t < best_t:
+                best, best_t = (bn, bd), t
+        if best is not None:
+            with _cache_lock:
+                _load_cache()[key] = {"bn": best[0], "bd": best[1],
+                                      "seconds": best_t}
+                _save_cache()
+            return best
+    return heuristic_blocks(kernel, n, d, interpret)

@@ -13,6 +13,12 @@ For r ≤ 512 the dense-hat contraction (O(n r) MXU MACs) beats the O(n)
 two-tap band on TPU for the same reason the paper's dense GPU path beat
 sparse tensors; the asymptotic O(n) form is a windowed variant of the same
 kernel (see DESIGN §3 / EXPERIMENTS §Perf for the crossover analysis).
+
+Shape policy (repro.kernels.backend): tile sizes come from the autotune
+cache / heuristic; ragged n, d are zero-padded to the tile multiple and
+sliced back. The hat spacing ``h`` is always computed from the *true* n,
+so padded rows get weights applied to zero inputs (reduce) or are sliced
+away (expand) — both exact under linearity.
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import backend
 
 
 def _hat_weights(n_start, bn, r, h, dtype=jnp.float32):
@@ -45,17 +53,9 @@ def _reduce_kernel(x_ref, o_ref, *, bn, r, h):
         o_ref[0] = (o_ref[0].astype(jnp.float32) + part).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "interpret", "bn", "bd"))
-def interp_reduce_pallas(x, idx_lo, w_lo, r: int, *, interpret=True,
-                         bn=256, bd=128):
-    """z = Wᵀ x. x: (b, n, d) -> (b, r, d). idx_lo/w_lo unused (weights are
-    regenerated from the uniform grid); kept for oracle-parity signature."""
-    del idx_lo, w_lo
+@functools.partial(jax.jit, static_argnames=("r", "h", "interpret", "bn", "bd"))
+def _reduce_call(x, r: int, h: float, *, interpret, bn, bd):
     b, n, d = x.shape
-    bn = min(bn, n)
-    bd = min(bd, d)
-    assert n % bn == 0 and d % bd == 0
-    h = (n - 1) / (r - 1)
     grid = (b, d // bd, n // bn)
     return pl.pallas_call(
         functools.partial(_reduce_kernel, bn=bn, r=r, h=h),
@@ -67,6 +67,37 @@ def interp_reduce_pallas(x, idx_lo, w_lo, r: int, *, interpret=True,
     )(x)
 
 
+def interp_reduce_pallas(x, idx_lo, w_lo, r: int, *, interpret=None,
+                         bn=None, bd=None):
+    """z = Wᵀ x. x: (b, n, d) -> (b, r, d). idx_lo/w_lo unused (weights are
+    regenerated from the uniform grid); kept for oracle-parity signature."""
+    del idx_lo, w_lo
+    b, n, d = x.shape
+    interpret = backend.resolve_interpret(interpret)
+    h = (n - 1) / (r - 1)                             # spacing from TRUE n
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(x):
+            tune = lambda BN, BD: _reduce_padded(x, r, h, interpret, BN, BD)
+        hbn, hbd = backend.get_blocks("interp_reduce", n, d, x.dtype,
+                                      interpret, tune_call=tune,
+                                      extra=f"r={r}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    return _reduce_padded(x, r, h, interpret, bn, bd)
+
+
+def _reduce_padded(x, r, h, interpret, bn, bd):
+    b, n, d = x.shape
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    if np_ != n or dp != d:
+        x = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
+        return _reduce_call(x, r, h, interpret=interpret, bn=bn,
+                            bd=bd)[:, :, :d]
+    return _reduce_call(x, r, h, interpret=interpret, bn=bn, bd=bd)
+
+
 def _expand_kernel(z_ref, o_ref, *, bn, r, h):
     ni = pl.program_id(2)
     w = _hat_weights(ni * bn, bn, r, h)               # (bn, r)
@@ -75,13 +106,9 @@ def _expand_kernel(z_ref, o_ref, *, bn, r, h):
     o_ref[0] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "interpret", "bn", "bd"))
-def _interp_expand_impl(z, n: int, *, interpret=True, bn=256, bd=128):
+@functools.partial(jax.jit, static_argnames=("n", "h", "interpret", "bn", "bd"))
+def _expand_call(z, n: int, h: float, *, interpret, bn, bd):
     b, r, d = z.shape
-    bn = min(bn, n)
-    bd = min(bd, d)
-    assert n % bn == 0 and d % bd == 0
-    h = (n - 1) / (r - 1)
     grid = (b, d // bd, n // bn)
     return pl.pallas_call(
         functools.partial(_expand_kernel, bn=bn, r=r, h=h),
@@ -93,8 +120,30 @@ def _interp_expand_impl(z, n: int, *, interpret=True, bn=256, bd=128):
     )(z)
 
 
-def interp_expand_pallas(z, idx_lo, w_lo, *, interpret=True, bn=256, bd=128):
+def _expand_padded(z, n, h, interpret, bn, bd):
+    b, r, d = z.shape
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    if dp != d:
+        z = jnp.pad(z, ((0, 0), (0, 0), (0, dp - d)))
+    out = _expand_call(z, np_, h, interpret=interpret, bn=bn, bd=bd)
+    return out[:, :n, :d] if (np_ != n or dp != d) else out
+
+
+def interp_expand_pallas(z, idx_lo, w_lo, *, interpret=None, bn=None, bd=None):
     """y = W z. z: (b, r, d) -> (b, n, d) with n = idx_lo.shape[0]."""
     del w_lo
     n = int(idx_lo.shape[0])
-    return _interp_expand_impl(z, n, interpret=interpret, bn=bn, bd=bd)
+    b, r, d = z.shape
+    interpret = backend.resolve_interpret(interpret)
+    h = (n - 1) / (r - 1)
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(z):
+            tune = lambda BN, BD: _expand_padded(z, n, h, interpret, BN, BD)
+        hbn, hbd = backend.get_blocks("interp_expand", n, d, z.dtype,
+                                      interpret, tune_call=tune,
+                                      extra=f"r={r}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    return _expand_padded(z, n, h, interpret, bn, bd)

@@ -1,63 +1,90 @@
 """jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
 
-Dispatch policy: explicit ``use_pallas`` argument wins; the global default
-(set via :func:`set_default_backend` / ``REPRO_USE_PALLAS``) is used
-otherwise. On this CPU container the Pallas path runs in interpret mode
-(tests); TPU is the compiled target.
+Dispatch policy (implemented in :mod:`repro.kernels.backend`)
+-------------------------------------------------------------
+Every op takes ``use_pallas`` / ``interpret`` keywords; ``None`` (the
+default) defers to the global policy, resolved in this order:
+
+1. **Explicit argument** — ``use_pallas=True/False`` per call site wins.
+2. **Programmatic default** — :func:`set_default_backend`.
+3. **Environment** — ``REPRO_USE_PALLAS`` = "1" / "0" / "auto" (default
+   "auto"); ``REPRO_PALLAS_INTERPRET`` = "1" / "0" / "auto".
+4. **Platform detection** — under "auto", the Pallas path (and compiled,
+   non-interpret execution) is selected exactly when
+   ``jax.default_backend() == "tpu"``; on CPU/GPU the jnp reference
+   oracles run, and any forced Pallas call uses interpret mode.
+
+Block sizes are *not* hardcoded: each kernel wrapper asks
+``backend.get_blocks(kernel, n, d, dtype, platform, mode)``, which
+consults an **on-disk autotune cache** (``REPRO_AUTOTUNE_CACHE``, default
+``~/.cache/repro/autotune.json``), runs a timing sweep on miss when
+``REPRO_AUTOTUNE=1`` and the inputs are concrete, and otherwise falls back
+to a shape-fitted heuristic. Ragged n / d (not multiples of the tile) are
+zero-padded to the tile boundary and sliced back — padding is
+semantics-preserving for every kernel here (zero-boundary conv, linear
+interp/Gram contractions). Shapes too small to tile legally (e.g. n
+smaller than the conv filter) fall back to the reference path instead of
+asserting.
 """
 from __future__ import annotations
-
-import os
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-
-_DEFAULT_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+from repro.kernels import backend, ref
 
 
-def set_default_backend(use_pallas: bool) -> None:
-    global _DEFAULT_PALLAS
-    _DEFAULT_PALLAS = bool(use_pallas)
+def set_default_backend(use_pallas: bool | None) -> None:
+    """Force the global Pallas/reference default (None = platform auto)."""
+    backend.set_default_use_pallas(use_pallas)
 
 
-def _use_pallas(flag) -> bool:
-    return _DEFAULT_PALLAS if flag is None else bool(flag)
-
-
-def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=True):
+def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=None):
     """Depthwise short conv (sparse Toeplitz component). x (b,n,d), filt (d,m)."""
-    if _use_pallas(use_pallas):
+    if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import short_conv as k
         return k.short_conv_pallas(x, filt, causal, interpret=interpret)
     return ref.short_conv_ref(x, filt, causal)
 
 
-def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=True):
+def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=None):
     """z = W^T x, banded linear-interp W. x (b,n,d) -> (b,r,d)."""
-    if _use_pallas(use_pallas):
+    if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import interp_matvec as k
         return k.interp_reduce_pallas(x, idx_lo, w_lo, r, interpret=interpret)
     return ref.interp_reduce_ref(x, idx_lo, w_lo, r)
 
 
-def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=True):
+def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=None):
     """y = W z. z (b,r,d) -> (b,n,d)."""
-    if _use_pallas(use_pallas):
+    if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import interp_matvec as k
         return k.interp_expand_pallas(z, idx_lo, w_lo, interpret=interpret)
     return ref.interp_expand_ref(z, idx_lo, w_lo)
 
 
+def ski_fused_pass2(x, z, a_dense, filt, causal: bool, *, use_pallas=None,
+                    interpret=None):
+    """Fused SKI pass 2: y = W (A z) + T_sparse x in one kernel / one write.
+
+    x (b,n,d); z = Wᵀx (b,r,d); a_dense (d,r,r); filt (d,m). Together with
+    :func:`interp_reduce` (pass 1) this is the two-pass fused SKI-TNO
+    pipeline — see kernels/ski_fused.py.
+    """
+    if backend.resolve_use_pallas(use_pallas):
+        from repro.kernels import ski_fused as k
+        return k.ski_fused_pass2_pallas(x, z, a_dense, filt, causal,
+                                        interpret=interpret)
+    return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
+
+
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
-             interpret=True, hshard=None):
+             interpret=None, hshard=None):
     """Mamba-2 SSD. See ref.ssd_scan_ref for shapes."""
-    if _use_pallas(use_pallas):
+    if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import ssd_scan as k
         return k.ssd_scan_pallas(x, dt, a, b, c, d_skip, chunk=chunk,
-                                 interpret=interpret)
+                                 interpret=backend.resolve_interpret(interpret))
     from repro.kernels import ssd_chunked
     return ssd_chunked.ssd_scan_chunked(x, dt, a, b, c, d_skip, chunk=chunk,
                                         hshard=hshard)

@@ -13,29 +13,65 @@ import jax.numpy as jnp
 
 
 # ------------------------------------------------------------- short conv
+def _shift_conv(x, filt, left):
+    """y[:, j] = sum_k f_k x[:, j-k+left] via m shifted multiply-adds over a
+    zero-padded copy — 3-4x faster than conv_general_dilated's depthwise
+    lowering on XLA:CPU (memory-bound slices vs grouped conv)."""
+    n = x.shape[1]
+    m = filt.shape[-1]
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (m - 1 - left, left), (0, 0)))
+    f = filt.astype(jnp.float32)
+    acc = jnp.zeros(x.shape, jnp.float32)
+    for k in range(m):
+        acc = acc + xp[:, m - 1 - k:m - 1 - k + n, :] * f[:, k][None, None, :]
+    return acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def short_conv_ref(x: jax.Array, filt: jax.Array, causal: bool) -> jax.Array:
     """Depthwise short 1-D convolution — the sparse Toeplitz component.
 
     x: (b, n, d); filt: (d, m) per-channel taps.
     causal: taps cover lags 0..m-1 (y_i = sum_k f[k] x_{i-k}).
     bidirectional: taps cover lags -(m//2) .. m-1-m//2 (centered).
-    Returns (b, n, d). (Shift-add and custom-VJP variants were benchmarked
-    on XLA:CPU and lose to the grouped conv once backward is included —
-    EXPERIMENTS §Perf; the TPU path is the Pallas kernel.)
+    Returns (b, n, d).
+
+    Forward is the shift-add form (beats the grouped-conv lowering ~3.4x
+    on XLA:CPU at bench shapes). Plain autodiff of shift-add transposes to
+    32 scatter-adds (~3x slower than the conv backward — EXPERIMENTS
+    §Perf), so the VJP is supplied analytically: both cotangents are
+    themselves shift-convs. Being a custom_vjp, forward-mode AD
+    (jvp/jacfwd) is unsupported through this op; the repo trains with
+    reverse mode only. The TPU path is the Pallas kernel.
     """
-    b, n, d = x.shape
     m = filt.shape[-1]
     left = 0 if causal else m // 2
-    dn = jax.lax.conv_dimension_numbers(
-        (b, n + m - 1, d), (m, 1, d), ("NHC", "HIO", "NHC"))
-    # depthwise: feature_group_count = d, kernel (m, 1, d)
-    k = jnp.flip(filt, axis=-1).T[:, None, :]  # (m, 1, d): cross-corr->conv
-    # pad so output index i reads lags (i - k + left) for k = 0..m-1
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (m - 1 - left, left), (0, 0)))
-    y = jax.lax.conv_general_dilated(
-        xp, k.astype(jnp.float32), (1,), "VALID",
-        dimension_numbers=dn, feature_group_count=d)
-    return y.astype(x.dtype)
+    return _shift_conv(x, filt, left).astype(x.dtype)
+
+
+def _short_conv_fwd(x, filt, causal):
+    return short_conv_ref(x, filt, causal), (x, filt)
+
+
+def _short_conv_bwd(causal, res, g):
+    x, filt = res
+    m = filt.shape[-1]
+    n = x.shape[1]
+    left = 0 if causal else m // 2
+    gf = g.astype(jnp.float32)
+    # dx: correlation = conv with flipped taps and mirrored offset
+    dx = _shift_conv(gf, jnp.flip(filt, axis=-1), m - 1 - left)
+    # dfilt[c, k] = sum_{b,j} g[b,j,c] * xpad[b, j+m-1-k, c]
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (m - 1 - left, left), (0, 0)))
+    df = jnp.stack(
+        [jnp.einsum("bnc,bnc->c", gf, xp[:, m - 1 - k:m - 1 - k + n, :])
+         for k in range(m)], axis=-1)                       # (d, m)
+    return dx.astype(x.dtype), df.astype(filt.dtype)
+
+
+short_conv_ref.defvjp(_short_conv_fwd, _short_conv_bwd)
 
 
 # -------------------------------------------------- banded interp (SKI W)
@@ -80,6 +116,34 @@ def dense_interp_matrix(idx_lo: jax.Array, w_lo: jax.Array, r: int):
     w = w.at[jnp.arange(n), idx_lo].add(w_lo)
     w = w.at[jnp.arange(n), idx_lo + 1].add(1.0 - w_lo)
     return w
+
+
+# ----------------------------------------------------- fused SKI pass 2
+def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
+                        filt: jax.Array, causal: bool) -> jax.Array:
+    """Oracle for kernels/ski_fused.py: y = W (A z) + T_sparse x.
+
+    x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r); filt: (d, m).
+    fp32 accumulation throughout, cast back to x.dtype at the end.
+
+    The expansion uses W's banded structure (≤2 non-zeros/row → two row
+    gathers + blend, the paper's O(n) action) instead of the dense (n, r)
+    matmul: O(n d) memory-bound vs O(n r d) MACs — the big CPU win of the
+    fused pipeline at bench shapes. The Pallas kernel keeps the dense-hat
+    MXU form (TPU crossover, kernels/interp_matvec.py docstring).
+    """
+    n = x.shape[1]
+    r = z.shape[1]
+    z2 = jnp.einsum("dst,btd->bsd", a_dense.astype(jnp.float32),
+                    z.astype(jnp.float32))
+    # banded W row weights, identical construction to ski.make_inducing
+    h = (n - 1) / (r - 1)
+    f = jnp.arange(n, dtype=jnp.float32) / h
+    lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
+    w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)[None, :, None]
+    y = w_lo * z2[:, lo, :] + (1.0 - w_lo) * z2[:, lo + 1, :]
+    y = y + short_conv_ref(x, filt, causal).astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 # ------------------------------------------------------------- mamba2 SSD

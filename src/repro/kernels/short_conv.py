@@ -7,6 +7,12 @@ Halo exchange is done by passing the same HBM array under three BlockSpecs
 sparse tensors (the paper's PyTorch pain point, DESIGN §3).
 
 Layout: x (b, n, d) tiled (1, BN, BD); filter (d, m) tiled (BD, m).
+
+Shape policy (repro.kernels.backend): block sizes come from the autotune
+cache / heuristic; n and d that do not divide the tiles are zero-padded up
+to the tile multiple and sliced back (zero padding matches the conv's
+boundary semantics). When no legal tile covers the filter halo (bn < m,
+i.e. tiny n) the jnp reference path is used instead of crashing.
 """
 from __future__ import annotations
 
@@ -15,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import backend
 
 
 def _kernel(prev_ref, cur_ref, nxt_ref, filt_ref, o_ref, *, m, left, bn, nb_total):
@@ -39,15 +47,11 @@ def _kernel(prev_ref, cur_ref, nxt_ref, filt_ref, o_ref, *, m, left, bn, nb_tota
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "interpret", "bn", "bd"))
-def short_conv_pallas(x, filt, causal: bool, *, interpret=True, bn=256, bd=128):
-    """x: (b, n, d); filt: (d, m). Matches ref.short_conv_ref."""
+def _short_conv_call(x, filt, causal: bool, *, interpret, bn, bd):
+    """Tiled pallas_call; requires n % bn == 0, d % bd == 0, bn >= m."""
     b, n, d = x.shape
     m = filt.shape[-1]
     left = 0 if causal else m // 2
-    bn = min(bn, n)
-    bd = min(bd, d)
-    assert n % bn == 0 and d % bd == 0, (n, bn, d, bd)
-    assert bn >= m, "block must cover the filter halo"
     nb, db = n // bn, d // bd
     grid = (b, db, nb)
 
@@ -56,7 +60,7 @@ def short_conv_pallas(x, filt, causal: bool, *, interpret=True, bn=256, bd=128):
             return (bi, jnp.clip(ni + shift, 0, nb - 1), di)
         return f
 
-    out = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_kernel, m=m, left=left, bn=bn, nb_total=nb),
         grid=grid,
         in_specs=[
@@ -69,4 +73,36 @@ def short_conv_pallas(x, filt, causal: bool, *, interpret=True, bn=256, bd=128):
         out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
         interpret=interpret,
     )(x, x, x, filt)
-    return out
+
+
+def _padded_call(x, filt, causal, interpret, bn, bd):
+    b, n, d = x.shape
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    if np_ != n or dp != d:
+        xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
+        fp = jnp.pad(filt, ((0, dp - d), (0, 0)))
+        return _short_conv_call(xp, fp, causal, interpret=interpret,
+                                bn=bn, bd=bd)[:, :n, :d]
+    return _short_conv_call(x, filt, causal, interpret=interpret, bn=bn, bd=bd)
+
+
+def short_conv_pallas(x, filt, causal: bool, *, interpret=None,
+                      bn=None, bd=None):
+    """x: (b, n, d); filt: (d, m). Matches ref.short_conv_ref for any n, d."""
+    b, n, d = x.shape
+    m = filt.shape[-1]
+    interpret = backend.resolve_interpret(interpret)
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(x, filt):
+            tune = lambda BN, BD: _padded_call(x, filt, causal, interpret, BN, BD)
+        hbn, hbd = backend.get_blocks("short_conv", n, d, x.dtype, interpret,
+                                      tune_call=tune, extra=f"m={m}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    if bn < m:
+        # no tile covers the filter halo (n < m): reference path, not a crash
+        from repro.kernels import ref
+        return ref.short_conv_ref(x, filt, causal)
+    return _padded_call(x, filt, causal, interpret, bn, bd)

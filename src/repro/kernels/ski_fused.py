@@ -1,0 +1,150 @@
+"""Fused SKI-TNO pass-2 Pallas kernel (paper §3.2, DESIGN §3 item 1).
+
+The unfused SKI-TNO pipeline launches four kernels
+
+    y = short_conv(x) + W · (A · (Wᵀ x))
+        └── k1 ──┘       └k4┘ └k3┘ └k2┘
+
+streaming the full (b, n, d) activation through HBM between each. This
+module implements the *two-pass* fused form:
+
+* **pass 1** — ``interp_reduce`` (kernels/interp_matvec.py): z = Wᵀ x with
+  tiles VMEM-resident, output only (b, r, d).
+* **pass 2** — THIS kernel: for each (batch, d-tile) the r×r inducing-Gram
+  contraction z₂ = A z runs **once** on the MXU into VMEM scratch
+  (``pl.when(ni == 0)``; r ≤ 512 → direct matmul, no FFT — the paper's
+  observation that dense beats sparse/FFT at this size), then every
+  sequence tile regenerates its hat-weight block of W, contracts W z₂ on
+  the MXU, adds the m-tap short conv over the same VMEM-resident x tiles
+  (halo via prev/cur/next BlockSpecs), and performs a **single** output
+  write.
+
+Net: four HBM round-trips of (b, n, d) collapse into two (read x, write y).
+
+Ragged n, d follow the backend zero-pad policy; the hat spacing h comes
+from the true n. When bn < m (tiny n) the jnp reference path is used.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend
+from repro.kernels.interp_matvec import _hat_weights
+
+
+def _fused_kernel(prev_ref, cur_ref, nxt_ref, z_ref, a_ref, filt_ref, o_ref,
+                  z2_ref, *, m, left, bn, r, h, nb_total):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _gram():
+        # z2 = A z once per (batch, d-tile): batched (bd) r x r MXU matvec
+        zt = z_ref[0].astype(jnp.float32).T              # (bd, r)
+        a = a_ref[...].astype(jnp.float32)               # (bd, r, r)
+        z2 = jax.lax.dot_general(a, zt, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        z2_ref[...] = z2.T                               # (r, bd)
+
+    # low-rank half: y_low = W_tile z2 (MXU)
+    w = _hat_weights(ni * bn, bn, r, h)                  # (bn, r)
+    acc = jnp.dot(w, z2_ref[...], preferred_element_type=jnp.float32)
+
+    # sparse half: m-tap short conv over halo'd VMEM tiles (VPU)
+    hl = m - 1 - left
+    hr = left
+    prev = jnp.where(ni > 0, prev_ref[0], jnp.zeros_like(prev_ref[0]))
+    nxt = jnp.where(ni < nb_total - 1, nxt_ref[0], jnp.zeros_like(nxt_ref[0]))
+    cur = cur_ref[0]
+    xwin = jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
+                           axis=0) if hl else jnp.concatenate(
+                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
+    f = filt_ref[...].astype(jnp.float32)                # (bd, m)
+    for k in range(m):
+        sl = xwin[(m - 1 - k):(m - 1 - k) + bn].astype(jnp.float32)
+        acc = acc + sl * f[:, k][None, :]
+
+    o_ref[0] = acc.astype(o_ref.dtype)                   # single write
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "h", "interpret", "bn", "bd"))
+def _fused_call(x, z, a_dense, filt, causal: bool, h: float, *,
+                interpret, bn, bd):
+    """Requires n % bn == 0, d % bd == 0, bn >= m (padded by the wrapper)."""
+    b, n, d = x.shape
+    r = z.shape[1]
+    m = filt.shape[-1]
+    left = 0 if causal else m // 2
+    nb, db = n // bn, d // bd
+    grid = (b, db, nb)
+
+    def xmap(shift):
+        def f(bi, di, ni):
+            return (bi, jnp.clip(ni + shift, 0, nb - 1), di)
+        return f
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, m=m, left=left, bn=bn, r=r, h=h,
+                          nb_total=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), xmap(-1)),
+            pl.BlockSpec((1, bn, bd), xmap(0)),
+            pl.BlockSpec((1, bn, bd), xmap(+1)),
+            pl.BlockSpec((1, r, bd), lambda bi, di, ni: (bi, 0, di)),
+            pl.BlockSpec((bd, r, r), lambda bi, di, ni: (di, 0, 0)),
+            pl.BlockSpec((bd, m), lambda bi, di, ni: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, bd), lambda bi, di, ni: (bi, ni, di)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((r, bd), jnp.float32)],
+        interpret=interpret,
+    )(x, x, x, z, a_dense, filt)
+
+
+def _padded_call(x, z, a_dense, filt, causal, h, interpret, bn, bd):
+    b, n, d = x.shape
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    if np_ != n or dp != d:
+        pd = dp - d
+        xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, pd)))
+        zp = jnp.pad(z, ((0, 0), (0, 0), (0, pd)))
+        ap = jnp.pad(a_dense, ((0, pd), (0, 0), (0, 0)))
+        fp = jnp.pad(filt, ((0, pd), (0, 0)))
+        return _fused_call(xp, zp, ap, fp, causal, h, interpret=interpret,
+                           bn=bn, bd=bd)[:, :n, :d]
+    return _fused_call(x, z, a_dense, filt, causal, h, interpret=interpret,
+                       bn=bn, bd=bd)
+
+
+def ski_fused_pass2_pallas(x, z, a_dense, filt, causal: bool, *,
+                           interpret=None, bn=None, bd=None):
+    """y = W (A z) + T_sparse x, one kernel, one output write.
+
+    x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r) per-channel Gram;
+    filt: (d, m). Matches ref.ski_fused_pass2_ref.
+    """
+    b, n, d = x.shape
+    m = filt.shape[-1]
+    interpret = backend.resolve_interpret(interpret)
+    h = (n - 1) / (z.shape[1] - 1)
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(x, z, a_dense, filt):
+            tune = lambda BN, BD: _padded_call(x, z, a_dense, filt, causal,
+                                               h, interpret, BN, BD)
+        hbn, hbd = backend.get_blocks("ski_fused", n, d, x.dtype, interpret,
+                                      tune_call=tune,
+                                      extra=f"r={z.shape[1]}|m={m}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    if bn < m:
+        from repro.kernels import ref
+        return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
+    return _padded_call(x, z, a_dense, filt, causal, h, interpret, bn, bd)

@@ -1,5 +1,12 @@
-"""Hypothesis property tests on the system's core invariants."""
-import hypothesis
+"""Hypothesis property tests on the system's core invariants.
+
+Collects cleanly (skips, does not error) when hypothesis is not installed
+— see requirements-dev.txt for the pinned test deps.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
