@@ -9,7 +9,6 @@ loses to the FFT path for moderate n — must reproduce on this backend
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import report, time_fn
 from repro.core.causal_ski import causal_ski_lowrank

@@ -18,7 +18,6 @@ import numpy as np
 
 from benchmarks.common import report
 from repro.configs import get_config, reduce_for_smoke
-from repro.core.rpe import inverse_time_warp
 from repro.core.ski import SKIConfig, inducing_gram_coeffs, ski_init
 from repro.data.pipeline import DataConfig, batch_at
 from repro.models.context import Ctx
@@ -31,7 +30,6 @@ def run(steps=60, seq_len=64, vocab=256):
     # --- warp boundedness at 4x length
     cfg = SKIConfig(d=8, rank=16, filter_size=8)
     params, _ = unbox(ski_init(jax.random.PRNGKey(0), cfg))
-    k_short = inducing_gram_coeffs(params, cfg, 16, (64 - 1) / 15)
     k_long = inducing_gram_coeffs(params, cfg, 16, (256 - 1) / 15)
     report("extrapolation/ski_kernel_long_max",
            float(jnp.abs(k_long).max()), "abs",

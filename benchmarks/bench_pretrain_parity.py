@@ -44,7 +44,6 @@ def run(steps=80, seq_len=128, batch=16, vocab=256):
             opt, params, _ = adamw.step(ocfg, opt, grads, params)
             return params, opt, metr["nll"]
 
-        nll = None
         for step in range(steps):
             b = {k: jnp.asarray(v) for k, v in batch_at(dcfg, step).items()}
             params, opt, nll = train_step(params, opt, b)

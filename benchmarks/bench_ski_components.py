@@ -82,6 +82,52 @@ def _unfused_launches(cfg, n, a_coef):
     return run
 
 
+def _grad_fused_vs_unfused(sizes, d=64, b=4, iters=5):
+    """PR 2: time jax.grad through the fused custom-VJP pipeline vs the
+    unfused 4-kernel pipeline (one jit each, loss = sum(y), plan built
+    inside the differentiated function so parameter grads flow through the
+    Gram/RPE precomputation). Appended as the "bwd" section of
+    BENCH_ski_fused.json; the CI perf gate covers it alongside forward."""
+    rows = []
+    for n in sizes:
+        cfg_f = SKIConfig(d=d, rank=64, filter_size=32, fused=True)
+        cfg_u = dataclasses.replace(cfg_f, fused=False)
+        key = jax.random.PRNGKey(0)
+        params, _ = unbox(ski_init(key, cfg_f))
+        x = jax.random.normal(key, (b, n, d))
+
+        def make_grad(cfg):
+            def loss(p, x):
+                plan = ski_plan(p, cfg, n)
+                return jnp.sum(ski_tno_apply(p, cfg, x, plan=plan))
+            return jax.jit(jax.grad(loss))
+
+        t_fwd = time_fn(
+            jax.jit(lambda p, x, c=cfg_f: jnp.sum(
+                ski_tno_apply(p, c, x, plan=ski_plan(p, c, n)))),
+            params, x, iters=iters)
+        t_f, t_u = time_fns_interleaved(
+            [make_grad(cfg_f), make_grad(cfg_u)], params, x, iters=iters)
+        speedup = t_u / t_f
+        report(f"ski_fused/n{n}/bwd_fused", t_f * 1e3, "ms",
+               "grad of fused two-pass pipeline")
+        report(f"ski_fused/n{n}/bwd_unfused", t_u * 1e3, "ms",
+               "grad of 4-kernel unfused pipeline")
+        report(f"ski_fused/n{n}/bwd_speedup", speedup, "x",
+               "fused backward must not fall behind unfused (ISSUE 2)")
+        report(f"ski_fused/n{n}/bwd_over_fwd", t_f / t_fwd, "x",
+               "backward cost ratio (linear ops: expect ~2-3x)")
+        rows.append({
+            "n": n, "b": b, "d": d, "rank": 64, "filter_size": 32,
+            "fused_grad_ms": t_f * 1e3,
+            "unfused_grad_ms": t_u * 1e3,
+            "fused_fwd_ms": t_fwd * 1e3,
+            "bwd_speedup_vs_unfused": speedup,
+            "bwd_over_fwd": t_f / t_fwd,
+        })
+    return rows
+
+
 def _fused_vs_unfused(sizes, d=64, b=4, iters=5):
     rows = []
     for n in sizes:
@@ -121,17 +167,21 @@ def _fused_vs_unfused(sizes, d=64, b=4, iters=5):
             "unfused_monolithic_ms": t_unf_mono * 1e3,
             "speedup_vs_4launch": speedup,
         })
+    return rows
+
+
+def _write_json(rows, bwd_rows):
     payload = {
         "bench": "ski_fused_vs_unfused",
         "platform": backend.platform(),
         "use_pallas_default": backend.use_pallas_default(),
         "results": rows,
+        "bwd": bwd_rows,
     }
     try:
         _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
     except OSError as e:
         report("ski_fused/json_write_error", 0, "", repr(e))
-    return rows
 
 
 def run(smoke: bool = False):
@@ -145,8 +195,10 @@ def run(smoke: bool = False):
         # the Fig11 split decomposes the UNFUSED pipeline (its low/sparse
         # arms are the unfused component kernels) — keep 'both' coherent
         _fig11(params, dataclasses.replace(cfg, fused=False), x, n)
-    _fused_vs_unfused([2048] if smoke else [2048, 8192],
-                      iters=10 if smoke else 12)
+    sizes = [2048] if smoke else [2048, 8192]
+    rows = _fused_vs_unfused(sizes, iters=10 if smoke else 12)
+    bwd_rows = _grad_fused_vs_unfused(sizes, iters=5 if smoke else 8)
+    _write_json(rows, bwd_rows)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,7 @@ def main():
     neg = float(jnp.abs(kt[:, 65:]).max())
     pos = float(jnp.abs(kt[:, :64]).max())
     print(f"  negative-lag mass {neg:.2e} vs positive-lag {pos:.2e} "
-          f"-> kernel is exactly causal")
+          "-> kernel is exactly causal")
 
     print("\n== Drop the paper's mixer into an assigned architecture ==")
     import dataclasses

@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke

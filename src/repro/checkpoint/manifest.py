@@ -55,7 +55,6 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None):
     """Synchronous atomic save of a pytree of arrays."""
     leaves, treedef = _leaf_paths(tree)
     step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
-    data_dir = os.path.join(step_dir, "data")
     tmp_dir = step_dir + ".tmp"
     if os.path.exists(tmp_dir):
         shutil.rmtree(tmp_dir)
@@ -140,7 +139,7 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
     for meta, like, shd in zip(manifest["leaves"], leaves_like, shard_leaves):
         arr = np.load(os.path.join(step_dir, "data", meta["file"]))
         if meta.get("stored") == "raw_u8":
-            import ml_dtypes
+            import ml_dtypes  # noqa: F401 (registers bf16 with numpy)
             arr = arr.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
         assert tuple(arr.shape) == tuple(like.shape), (
             f"shape mismatch {arr.shape} vs {like.shape}")

@@ -5,7 +5,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.tno import TNOConfig, tno_apply, tno_init, tno_plan
 from repro.nn.layers import dense, dense_init, rmsnorm, rmsnorm_init

@@ -17,9 +17,12 @@ the TPU port does (DESIGN §3 item 1).
 Execution pipeline (default, ``SKIConfig.fused=True``): the **two-pass
 fused** form — pass 1 ``interp_reduce`` (z = Wᵀx), pass 2 one kernel
 fusing the dense r×r Gram contraction, the interp expansion and the short
-conv with a single output write (kernels/ski_fused.py). The 4-kernel
-unfused form (FFT Gram matvec) remains for r > 512 / oversized Gram and as
-the ``fused=False`` benchmark baseline.
+conv with a single output write (kernels/ski_fused.py) — exposed as the
+single differentiable op ``ops.ski_fused_tno`` whose Pallas backward is
+itself kernel launches (kernels/ski_vjp.py), so training takes the same
+path as inference. The 4-kernel unfused form (FFT Gram matvec) remains
+for r > 512 / oversized Gram and as the ``fused=False`` benchmark
+baseline; its Pallas ops are individually custom-VJP'd.
 
 Forward-invariant pieces (inducing geometry, warped lag grid, Gram
 coefficients / dense Gram) are grouped in a :func:`ski_plan`, built once
@@ -141,16 +144,20 @@ def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
             f"n={plan['idx_lo'].shape[0]}; called with causal={causal}, n={n}")
     r, idx_lo, w_lo = plan["r"], plan["idx_lo"], plan["w_lo"]
 
-    # pass 1: interp reduction z = W^T x while tiles are VMEM-resident
-    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)
-
     if "a_dense" in plan:
-        # pass 2 (fused): gram + expand + short conv, single output write
-        y = ops.ski_fused_pass2(x, z, plan["a_dense"], params["filt"],
-                                causal, use_pallas=cfg.use_pallas)
+        # two-pass fused pipeline as ONE differentiable op: on the Pallas
+        # path this is the custom-VJP kernel pair (kernels/ski_vjp.py), so
+        # jax.grad through a TNN block trains at kernel speed instead of
+        # silently requiring the reference (ROADMAP "Compiled-TPU status")
+        y = ops.ski_fused_tno(x, plan["a_dense"], params["filt"],
+                              idx_lo, w_lo, r, causal,
+                              use_pallas=cfg.use_pallas)
         return y.astype(x.dtype)
 
     # unfused 4-kernel fallback (r > 512 / fused disabled): FFT Gram matvec
+    # (each Pallas op here carries its own custom VJP, so this path is
+    # trainable too)
+    z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)
     y_sparse = ops.short_conv(x, params["filt"], causal,
                               use_pallas=cfg.use_pallas)
     zt = jnp.swapaxes(z, 1, 2)                                 # (b, d, r)

@@ -5,6 +5,13 @@ relative positions, multiplied by the decay bias λ^|t|, applied per channel
 with the O(n log n) FFT Toeplitz matvec. ``TNOConfig.variant`` selects the
 paper's accelerated variants (ski / fd) behind one interface so any model
 in the zoo can swap its token mixer.
+
+Every variant is differentiable end-to-end on whichever backend dispatch
+selects: the ski variant routes through ``ops.ski_fused_tno`` whose Pallas
+path carries custom-VJP backward kernels (kernels/ski_vjp.py), so
+``jax.grad`` of a TNN block never silently falls back to the jnp
+reference. The plan (:func:`tno_plan`) is built inside the traced forward,
+so parameter gradients flow through the Gram/RPE precomputation as usual.
 """
 from __future__ import annotations
 

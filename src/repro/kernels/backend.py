@@ -18,12 +18,32 @@ This module is the single place that decides *how* a kernel runs:
   for every kernel in this package: conv uses zero boundary conditions and
   the interp/gram contractions are linear).
 
+Training-path dispatch (PR 2)
+-----------------------------
+The Pallas ops carry ``jax.custom_vjp`` rules whose backward passes are
+themselves Pallas kernels (transposed siblings of the forwards — see
+:mod:`repro.kernels.ski_vjp`), so ``jax.grad`` through the fused SKI
+pipeline stays on the kernel path instead of silently requiring the jnp
+reference. :func:`resolve_pallas_grad` is the single switch the backward
+rules consult at trace time: under "auto" (default) the kernel backward is
+used whenever the Pallas forward is; ``REPRO_PALLAS_GRAD=0`` keeps the
+Pallas forward but computes cotangents with the jnp reference formulas
+(debugging escape hatch / numerical bisection).
+
+Residual/recompute policy: the custom VJPs save only the *inputs* of each
+op (plus the per-forward plan already materialised by the caller); no
+O(n·r) activation is stored. The pass-1 reduction z = Wᵀx is recomputed
+in the backward from the saved x — one extra O(n r d) kernel launch
+instead of an (b, r, d) residual held across the whole backward.
+
 Environment knobs (also documented in :mod:`repro.kernels.ops`):
 
 * ``REPRO_USE_PALLAS``    — "1"/"0" force the Pallas/reference path;
   "auto" (default) selects Pallas exactly on TPU.
 * ``REPRO_PALLAS_INTERPRET`` — "1"/"0" force interpret/compiled;
   "auto" (default) compiles exactly on TPU.
+* ``REPRO_PALLAS_GRAD``   — "1"/"0" force the kernel/reference backward
+  under the Pallas forward; "auto" (default) follows the forward path.
 * ``REPRO_AUTOTUNE``      — "1" enables the timing sweep on cache miss.
 * ``REPRO_AUTOTUNE_CACHE`` — cache file path
   (default ``~/.cache/repro/autotune.json``).
@@ -39,10 +59,12 @@ import jax
 
 _ENV_BACKEND = "REPRO_USE_PALLAS"
 _ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+_ENV_GRAD = "REPRO_PALLAS_GRAD"
 _ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 
 _FORCED_DEFAULT: bool | None = None     # set_default_use_pallas override
+_FORCED_GRAD: bool | None = None        # set_default_pallas_grad override
 
 
 # ------------------------------------------------------------- dispatch
@@ -85,6 +107,41 @@ def resolve_interpret(flag=None) -> bool:
     return platform() != "tpu"
 
 
+def set_default_pallas_grad(flag: bool | None) -> None:
+    """Programmatic override of the backward-path policy (None = auto)."""
+    global _FORCED_GRAD
+    _FORCED_GRAD = None if flag is None else bool(flag)
+
+
+def resolve_pallas_grad(flag=None) -> bool:
+    """Should a Pallas forward use its Pallas backward kernels?
+
+    Consulted (at trace time) by the ``jax.custom_vjp`` backward rules of
+    the Pallas ops. "auto" (default) returns True — the kernel backward
+    runs whenever the kernel forward was selected; ``REPRO_PALLAS_GRAD=0``
+    (or :func:`set_default_pallas_grad`) swaps in the jnp reference
+    cotangent formulas while keeping the Pallas forward, for debugging.
+    """
+    if flag is not None:
+        return bool(flag)
+    if _FORCED_GRAD is not None:
+        return _FORCED_GRAD
+    v = os.environ.get(_ENV_GRAD, "auto").lower()
+    if v in ("1", "true"):
+        return True
+    if v in ("0", "false"):
+        return False
+    return True
+
+
+def describe() -> str:
+    """One-line dispatch summary (logged by the trainer at startup so a
+    silent wrong-path run is visible in the step log)."""
+    return (f"platform={platform()} use_pallas={use_pallas_default()} "
+            f"interpret={resolve_interpret()} "
+            f"pallas_grad={resolve_pallas_grad()}")
+
+
 # ---------------------------------------------------------- shape fitting
 def round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
@@ -114,6 +171,7 @@ _DEFAULT_TARGETS = {
     "interp_reduce": (256, 128),
     "interp_expand": (256, 128),
     "ski_fused": (256, 128),
+    "conv_tap_grad": (256, 128),
 }
 
 _cache_lock = threading.Lock()

@@ -19,6 +19,11 @@ cache / heuristic; ragged n, d are zero-padded to the tile multiple and
 sliced back. The hat spacing ``h`` is always computed from the *true* n,
 so padded rows get weights applied to zero inputs (reduce) or are sliced
 away (expand) — both exact under linearity.
+
+Training path (PR 2): both kernels carry ``jax.custom_vjp`` rules. W has
+no trainable parameters (the hat weights are regenerated from the uniform
+grid), so each backward is a single launch of the *other* kernel:
+d(Wᵀx)/dx ⊢ expand, d(Wz)/dz ⊢ reduce. Residual-free — nothing is saved.
 """
 from __future__ import annotations
 
@@ -67,10 +72,46 @@ def _reduce_call(x, r: int, h: float, *, interpret, bn, bd):
     )(x)
 
 
+def _expand_blocks(n, d, dtype, interpret):
+    """(bn, bd) for an expand-shaped launch (cache-or-heuristic only — the
+    backward rules run under tracers, so no timing sweep)."""
+    bn, bd = backend.get_blocks("interp_expand", n, d, dtype, interpret)
+    return backend.clamp_blocks(bn, bd, n, d, interpret)
+
+
+def _reduce_blocks(n, d, dtype, interpret):
+    bn, bd = backend.get_blocks("interp_reduce", n, d, dtype, interpret)
+    return backend.clamp_blocks(bn, bd, n, d, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _reduce_core(x, n, r, h, interpret, bn, bd):
+    return _reduce_padded(x, r, h, interpret, bn, bd)
+
+
+def _reduce_core_fwd(x, n, r, h, interpret, bn, bd):
+    return _reduce_core(x, n, r, h, interpret, bn, bd), None
+
+
+def _reduce_core_bwd(n, r, h, interpret, bn, bd, res, g):
+    del res                                           # residual-free
+    if not backend.resolve_pallas_grad():
+        from repro.kernels import ref
+        w = ref.hat_interp_matrix(n, r)
+        dx = jnp.einsum("nr,brd->bnd", w, g.astype(jnp.float32))
+        return (dx.astype(g.dtype),)
+    ebn, ebd = _expand_blocks(n, g.shape[2], g.dtype, interpret)
+    return (_expand_padded(g, n, h, interpret, ebn, ebd),)
+
+
+_reduce_core.defvjp(_reduce_core_fwd, _reduce_core_bwd)
+
+
 def interp_reduce_pallas(x, idx_lo, w_lo, r: int, *, interpret=None,
                          bn=None, bd=None):
     """z = Wᵀ x. x: (b, n, d) -> (b, r, d). idx_lo/w_lo unused (weights are
-    regenerated from the uniform grid); kept for oracle-parity signature."""
+    regenerated from the uniform grid); kept for oracle-parity signature.
+    Differentiable in x (custom VJP: the backward is one expand launch)."""
     del idx_lo, w_lo
     b, n, d = x.shape
     interpret = backend.resolve_interpret(interpret)
@@ -85,7 +126,7 @@ def interp_reduce_pallas(x, idx_lo, w_lo, r: int, *, interpret=None,
         bn = bn or hbn
         bd = bd or hbd
     bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
-    return _reduce_padded(x, r, h, interpret, bn, bd)
+    return _reduce_core(x, n, r, h, interpret, bn, bd)
 
 
 def _reduce_padded(x, r, h, interpret, bn, bd):
@@ -129,8 +170,32 @@ def _expand_padded(z, n, h, interpret, bn, bd):
     return out[:, :n, :d] if (np_ != n or dp != d) else out
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _expand_core(z, n, r, h, interpret, bn, bd):
+    return _expand_padded(z, n, h, interpret, bn, bd)
+
+
+def _expand_core_fwd(z, n, r, h, interpret, bn, bd):
+    return _expand_core(z, n, r, h, interpret, bn, bd), None
+
+
+def _expand_core_bwd(n, r, h, interpret, bn, bd, res, g):
+    del res                                           # residual-free
+    if not backend.resolve_pallas_grad():
+        from repro.kernels import ref
+        w = ref.hat_interp_matrix(n, r)
+        dz = jnp.einsum("nr,bnd->brd", w, g.astype(jnp.float32))
+        return (dz.astype(g.dtype),)
+    rbn, rbd = _reduce_blocks(n, g.shape[2], g.dtype, interpret)
+    return (_reduce_padded(g, r, h, interpret, rbn, rbd),)
+
+
+_expand_core.defvjp(_expand_core_fwd, _expand_core_bwd)
+
+
 def interp_expand_pallas(z, idx_lo, w_lo, *, interpret=None, bn=None, bd=None):
-    """y = W z. z: (b, r, d) -> (b, n, d) with n = idx_lo.shape[0]."""
+    """y = W z. z: (b, r, d) -> (b, n, d) with n = idx_lo.shape[0].
+    Differentiable in z (custom VJP: the backward is one reduce launch)."""
     del w_lo
     n = int(idx_lo.shape[0])
     b, r, d = z.shape
@@ -146,4 +211,4 @@ def interp_expand_pallas(z, idx_lo, w_lo, *, interpret=None, bn=None, bd=None):
         bn = bn or hbn
         bd = bd or hbd
     bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
-    return _expand_padded(z, n, h, interpret, bn, bd)
+    return _expand_core(z, n, r, h, interpret, bn, bd)

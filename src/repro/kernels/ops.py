@@ -14,6 +14,13 @@ default) defers to the global policy, resolved in this order:
    ``jax.default_backend() == "tpu"``; on CPU/GPU the jnp reference
    oracles run, and any forced Pallas call uses interpret mode.
 
+Training (PR 2): the Pallas wrappers carry ``jax.custom_vjp`` rules whose
+backwards are themselves kernel launches (custom_vjp bypasses the
+pallas_call autodiff limitation, so this holds in interpret mode too) —
+``jax.grad`` through any op here stays on whichever path the forward
+dispatched to. ``REPRO_PALLAS_GRAD`` = "0" forces the jnp reference
+cotangent formulas under a Pallas forward (debugging escape hatch).
+
 Block sizes are *not* hardcoded: each kernel wrapper asks
 ``backend.get_blocks(kernel, n, d, dtype, platform, mode)``, which
 consults an **on-disk autotune cache** (``REPRO_AUTOTUNE_CACHE``, default
@@ -27,9 +34,6 @@ smaller than the conv filter) fall back to the reference path instead of
 asserting.
 """
 from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
 
 from repro.kernels import backend, ref
 
@@ -69,13 +73,36 @@ def ski_fused_pass2(x, z, a_dense, filt, causal: bool, *, use_pallas=None,
 
     x (b,n,d); z = Wᵀx (b,r,d); a_dense (d,r,r); filt (d,m). Together with
     :func:`interp_reduce` (pass 1) this is the two-pass fused SKI-TNO
-    pipeline — see kernels/ski_fused.py.
+    pipeline — see kernels/ski_fused.py. Forward-only on the Pallas path
+    (z is an already-materialised intermediate); the trainable form is
+    :func:`ski_fused_tno`.
     """
     if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import ski_fused as k
         return k.ski_fused_pass2_pallas(x, z, a_dense, filt, causal,
                                         interpret=interpret)
     return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
+
+
+def ski_fused_tno(x, a_dense, filt, idx_lo, w_lo, r: int, causal: bool, *,
+                  use_pallas=None, interpret=None):
+    """Differentiable two-pass fused SKI-TNO: y = W (A (Wᵀ x)) + T_sparse x.
+
+    x (b,n,d); a_dense (d,r,r) per-channel inducing Gram; filt (d,m);
+    idx_lo/w_lo: inducing geometry (ref path only — the Pallas kernels
+    regenerate the hat weights from the uniform grid). This is the op the
+    TNN block trains through: on the Pallas path it carries a custom VJP
+    whose backward is itself kernel launches (kernels/ski_vjp.py), so
+    ``jax.grad`` stays at kernel speed instead of silently needing the
+    reference; on the reference path plain autodiff applies. The
+    ``REPRO_PALLAS_GRAD`` knob (kernels/backend.py) can force the
+    reference cotangent formulas under the Pallas forward for debugging.
+    """
+    if backend.resolve_use_pallas(use_pallas):
+        from repro.kernels import ski_vjp as k
+        return k.ski_fused_tno_pallas(x, a_dense, filt, int(r), bool(causal),
+                                      backend.resolve_interpret(interpret))
+    return ref.ski_fused_tno_ref(x, a_dense, filt, idx_lo, w_lo, r, causal)
 
 
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,

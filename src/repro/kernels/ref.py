@@ -54,24 +54,37 @@ def _short_conv_fwd(x, filt, causal):
     return short_conv_ref(x, filt, causal), (x, filt)
 
 
+def conv_tap_grad_ref(g, x, m: int, left: int) -> jax.Array:
+    """Filter cotangent: df[c,k] = Σ_{b,j} g[b,j,c] x[b,j-k+left,c] → (d, m).
+
+    Oracle for kernels/ski_grad.conv_tap_grad_pallas. fp32 output."""
+    n = x.shape[1]
+    gf = g.astype(jnp.float32)
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (m - 1 - left, left), (0, 0)))
+    return jnp.stack(
+        [jnp.einsum("bnc,bnc->c", gf, xp[:, m - 1 - k:m - 1 - k + n, :])
+         for k in range(m)], axis=-1)                       # (d, m)
+
+
 def _short_conv_bwd(causal, res, g):
     x, filt = res
     m = filt.shape[-1]
-    n = x.shape[1]
     left = 0 if causal else m // 2
-    gf = g.astype(jnp.float32)
     # dx: correlation = conv with flipped taps and mirrored offset
-    dx = _shift_conv(gf, jnp.flip(filt, axis=-1), m - 1 - left)
-    # dfilt[c, k] = sum_{b,j} g[b,j,c] * xpad[b, j+m-1-k, c]
-    xp = jnp.pad(x.astype(jnp.float32),
-                 ((0, 0), (m - 1 - left, left), (0, 0)))
-    df = jnp.stack(
-        [jnp.einsum("bnc,bnc->c", gf, xp[:, m - 1 - k:m - 1 - k + n, :])
-         for k in range(m)], axis=-1)                       # (d, m)
+    dx = _shift_conv(g, jnp.flip(filt, axis=-1), m - 1 - left)
+    df = conv_tap_grad_ref(g, x, m, left)
     return dx.astype(x.dtype), df.astype(filt.dtype)
 
 
 short_conv_ref.defvjp(_short_conv_fwd, _short_conv_bwd)
+
+
+def short_conv_left_ref(x, filt, left: int) -> jax.Array:
+    """Generalised-offset shift conv (differentiable via plain autodiff);
+    used by the Pallas wrappers' tiny-n fallback for backward-sibling
+    launches whose ``left`` is not causal-derived."""
+    return _shift_conv(x, filt, left).astype(x.dtype)
 
 
 # -------------------------------------------------- banded interp (SKI W)
@@ -118,13 +131,34 @@ def dense_interp_matrix(idx_lo: jax.Array, w_lo: jax.Array, r: int):
     return w
 
 
+def hat_interp_matrix(n: int, r: int):
+    """(n, r) W regenerated from the uniform grid alone — identical
+    construction to core.ski.make_inducing, but importable from the kernel
+    layer (used by the reference cotangent formulas)."""
+    h = (n - 1) / (r - 1)
+    f = jnp.arange(n, dtype=jnp.float32) / h
+    lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
+    w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)
+    return dense_interp_matrix(lo, w_lo, r)
+
+
+def gram_grad_ref(gz: jax.Array, z: jax.Array) -> jax.Array:
+    """Gram cotangent: dA[c,s,t] = Σ_b gz[b,s,c] z[b,t,c] → (d, r, r).
+
+    Oracle for kernels/ski_grad.gram_grad_pallas. fp32 output."""
+    return jnp.einsum("bsc,btc->cst", gz.astype(jnp.float32),
+                      z.astype(jnp.float32))
+
+
 # ----------------------------------------------------- fused SKI pass 2
 def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
-                        filt: jax.Array, causal: bool) -> jax.Array:
+                        filt: jax.Array, causal: bool,
+                        left: int | None = None) -> jax.Array:
     """Oracle for kernels/ski_fused.py: y = W (A z) + T_sparse x.
 
     x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r); filt: (d, m).
     fp32 accumulation throughout, cast back to x.dtype at the end.
+    ``left`` overrides the causal-derived tap offset (backward siblings).
 
     The expansion uses W's banded structure (≤2 non-zeros/row → two row
     gathers + blend, the paper's O(n) action) instead of the dense (n, r)
@@ -134,6 +168,7 @@ def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
     """
     n = x.shape[1]
     r = z.shape[1]
+    m = filt.shape[-1]
     z2 = jnp.einsum("dst,btd->bsd", a_dense.astype(jnp.float32),
                     z.astype(jnp.float32))
     # banded W row weights, identical construction to ski.make_inducing
@@ -142,8 +177,24 @@ def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
     lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
     w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)[None, :, None]
     y = w_lo * z2[:, lo, :] + (1.0 - w_lo) * z2[:, lo + 1, :]
-    y = y + short_conv_ref(x, filt, causal).astype(jnp.float32)
+    if left is None or left == (0 if causal else m // 2):
+        y_sp = short_conv_ref(x, filt, causal)    # analytic custom-VJP form
+    else:
+        y_sp = short_conv_left_ref(x, filt, left)
+    y = y + y_sp.astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def ski_fused_tno_ref(x: jax.Array, a_dense: jax.Array, filt: jax.Array,
+                      idx_lo: jax.Array, w_lo: jax.Array, r: int,
+                      causal: bool) -> jax.Array:
+    """Reference two-pass fused SKI-TNO: y = W (A (Wᵀ x)) + T_sparse x.
+
+    Semantics contract for kernels/ski_vjp.ski_fused_tno_pallas; fully
+    differentiable in (x, a_dense, filt) via plain autodiff (+ the
+    short-conv analytic VJP)."""
+    z = interp_reduce_ref(x, idx_lo, w_lo, r)
+    return ski_fused_pass2_ref(x, z, a_dense, filt, causal)
 
 
 # ------------------------------------------------------------- mamba2 SSD

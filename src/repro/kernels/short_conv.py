@@ -13,6 +13,13 @@ cache / heuristic; n and d that do not divide the tiles are zero-padded up
 to the tile multiple and sliced back (zero padding matches the conv's
 boundary semantics). When no legal tile covers the filter halo (bn < m,
 i.e. tiny n) the jnp reference path is used instead of crashing.
+
+Training path (PR 2): the kernel carries a ``jax.custom_vjp``. Both
+cotangents are themselves kernel launches — dx is this same conv with the
+taps flipped and the offset mirrored (left → m-1-left), dfilt is the
+per-tile correlation reduction of :mod:`repro.kernels.ski_grad`. The
+tap offset is therefore generalised from the causal flag to an arbitrary
+``left`` ∈ [0, m-1] so the transposed sibling reuses one kernel body.
 """
 from __future__ import annotations
 
@@ -46,12 +53,11 @@ def _kernel(prev_ref, cur_ref, nxt_ref, filt_ref, o_ref, *, m, left, bn, nb_tota
     o_ref[0] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "interpret", "bn", "bd"))
-def _short_conv_call(x, filt, causal: bool, *, interpret, bn, bd):
+@functools.partial(jax.jit, static_argnames=("left", "interpret", "bn", "bd"))
+def _short_conv_call(x, filt, left: int, *, interpret, bn, bd):
     """Tiled pallas_call; requires n % bn == 0, d % bd == 0, bn >= m."""
     b, n, d = x.shape
     m = filt.shape[-1]
-    left = 0 if causal else m // 2
     nb, db = n // bn, d // bd
     grid = (b, db, nb)
 
@@ -75,27 +81,65 @@ def _short_conv_call(x, filt, causal: bool, *, interpret, bn, bd):
     )(x, x, x, filt)
 
 
-def _padded_call(x, filt, causal, interpret, bn, bd):
+def _padded_call(x, filt, left, interpret, bn, bd):
     b, n, d = x.shape
     np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
     if np_ != n or dp != d:
         xp = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
         fp = jnp.pad(filt, ((0, dp - d), (0, 0)))
-        return _short_conv_call(xp, fp, causal, interpret=interpret,
+        return _short_conv_call(xp, fp, left, interpret=interpret,
                                 bn=bn, bd=bd)[:, :n, :d]
-    return _short_conv_call(x, filt, causal, interpret=interpret, bn=bn, bd=bd)
+    return _short_conv_call(x, filt, left, interpret=interpret, bn=bn, bd=bd)
+
+
+# --------------------------------------------------------------- custom VJP
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _short_conv_core(x, filt, left, interpret, bn, bd):
+    """Differentiable kernel core: y_j = Σ_k f_k x_{j-k+left}."""
+    return _padded_call(x, filt, left, interpret, bn, bd)
+
+
+def _short_conv_core_fwd(x, filt, left, interpret, bn, bd):
+    # residuals: the inputs only (recompute policy — backend.py docstring)
+    return _short_conv_core(x, filt, left, interpret, bn, bd), (x, filt)
+
+
+def _short_conv_core_bwd(left, interpret, bn, bd, res, g):
+    x, filt = res
+    m = filt.shape[-1]
+    if not backend.resolve_pallas_grad():
+        from repro.kernels import ref
+        dx = ref._shift_conv(g, jnp.flip(filt, axis=-1), m - 1 - left)
+        return (dx.astype(x.dtype),
+                ref.conv_tap_grad_ref(g, x, m, left).astype(filt.dtype))
+    # dx: correlation = same kernel, flipped taps, mirrored offset
+    dx = _padded_call(g, jnp.flip(filt, axis=-1), m - 1 - left, interpret,
+                      bn, bd)
+    from repro.kernels.ski_grad import conv_tap_grad_pallas
+    df = conv_tap_grad_pallas(g, x, m, left, interpret=interpret)
+    return dx.astype(x.dtype), df.astype(filt.dtype)
+
+
+_short_conv_core.defvjp(_short_conv_core_fwd, _short_conv_core_bwd)
 
 
 def short_conv_pallas(x, filt, causal: bool, *, interpret=None,
-                      bn=None, bd=None):
-    """x: (b, n, d); filt: (d, m). Matches ref.short_conv_ref for any n, d."""
+                      bn=None, bd=None, left=None):
+    """x: (b, n, d); filt: (d, m). Matches ref.short_conv_ref for any n, d.
+
+    Differentiable in (x, filt) via the custom VJP above. ``left``
+    overrides the causal-derived tap offset (used by the backward-sibling
+    launches; ``None`` keeps the public causal/bidirectional semantics).
+    """
     b, n, d = x.shape
     m = filt.shape[-1]
+    if left is None:
+        left = 0 if causal else m // 2
     interpret = backend.resolve_interpret(interpret)
     if bn is None or bd is None:
         tune = None
         if backend.is_concrete(x, filt):
-            tune = lambda BN, BD: _padded_call(x, filt, causal, interpret, BN, BD)
+            tune = lambda BN, BD: _padded_call(x, filt, left, interpret, BN, BD)
         hbn, hbd = backend.get_blocks("short_conv", n, d, x.dtype, interpret,
                                       tune_call=tune, extra=f"m={m}")
         bn = bn or hbn
@@ -104,5 +148,5 @@ def short_conv_pallas(x, filt, causal: bool, *, interpret=None,
     if bn < m:
         # no tile covers the filter halo (n < m): reference path, not a crash
         from repro.kernels import ref
-        return ref.short_conv_ref(x, filt, causal)
-    return _padded_call(x, filt, causal, interpret, bn, bd)
+        return ref.short_conv_left_ref(x, filt, left)
+    return _short_conv_core(x, filt, left, interpret, bn, bd)

@@ -23,6 +23,12 @@ Net: four HBM round-trips of (b, n, d) collapse into two (read x, write y).
 
 Ragged n, d follow the backend zero-pad policy; the hat spacing h comes
 from the true n. When bn < m (tiny n) the jnp reference path is used.
+
+Training path (PR 2): the tap offset is generalised from the causal flag
+to an arbitrary ``left`` so that this same kernel serves as its own
+backward sibling — dx = W (Aᵀ (Wᵀ g)) + T_sparseᵀ g is exactly this
+kernel launched on the cotangent with A transposed, the taps flipped and
+left mirrored to m-1-left (see kernels/ski_vjp.py for the custom VJP).
 """
 from __future__ import annotations
 
@@ -72,14 +78,13 @@ def _fused_kernel(prev_ref, cur_ref, nxt_ref, z_ref, a_ref, filt_ref, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "h", "interpret", "bn", "bd"))
-def _fused_call(x, z, a_dense, filt, causal: bool, h: float, *,
+                   static_argnames=("left", "h", "interpret", "bn", "bd"))
+def _fused_call(x, z, a_dense, filt, left: int, h: float, *,
                 interpret, bn, bd):
     """Requires n % bn == 0, d % bd == 0, bn >= m (padded by the wrapper)."""
     b, n, d = x.shape
     r = z.shape[1]
     m = filt.shape[-1]
-    left = 0 if causal else m // 2
     nb, db = n // bn, d // bd
     grid = (b, db, nb)
 
@@ -107,7 +112,7 @@ def _fused_call(x, z, a_dense, filt, causal: bool, h: float, *,
     )(x, x, x, z, a_dense, filt)
 
 
-def _padded_call(x, z, a_dense, filt, causal, h, interpret, bn, bd):
+def _padded_call(x, z, a_dense, filt, left, h, interpret, bn, bd):
     b, n, d = x.shape
     np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
     if np_ != n or dp != d:
@@ -116,27 +121,30 @@ def _padded_call(x, z, a_dense, filt, causal, h, interpret, bn, bd):
         zp = jnp.pad(z, ((0, 0), (0, 0), (0, pd)))
         ap = jnp.pad(a_dense, ((0, pd), (0, 0), (0, 0)))
         fp = jnp.pad(filt, ((0, pd), (0, 0)))
-        return _fused_call(xp, zp, ap, fp, causal, h, interpret=interpret,
+        return _fused_call(xp, zp, ap, fp, left, h, interpret=interpret,
                            bn=bn, bd=bd)[:, :n, :d]
-    return _fused_call(x, z, a_dense, filt, causal, h, interpret=interpret,
+    return _fused_call(x, z, a_dense, filt, left, h, interpret=interpret,
                        bn=bn, bd=bd)
 
 
 def ski_fused_pass2_pallas(x, z, a_dense, filt, causal: bool, *,
-                           interpret=None, bn=None, bd=None):
+                           interpret=None, bn=None, bd=None, left=None):
     """y = W (A z) + T_sparse x, one kernel, one output write.
 
     x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r) per-channel Gram;
-    filt: (d, m). Matches ref.ski_fused_pass2_ref.
+    filt: (d, m). Matches ref.ski_fused_pass2_ref. ``left`` overrides the
+    causal-derived tap offset (backward-sibling launches only).
     """
     b, n, d = x.shape
     m = filt.shape[-1]
+    if left is None:
+        left = 0 if causal else m // 2
     interpret = backend.resolve_interpret(interpret)
     h = (n - 1) / (z.shape[1] - 1)
     if bn is None or bd is None:
         tune = None
         if backend.is_concrete(x, z, a_dense, filt):
-            tune = lambda BN, BD: _padded_call(x, z, a_dense, filt, causal,
+            tune = lambda BN, BD: _padded_call(x, z, a_dense, filt, left,
                                                h, interpret, BN, BD)
         hbn, hbd = backend.get_blocks("ski_fused", n, d, x.dtype, interpret,
                                       tune_call=tune,
@@ -146,5 +154,5 @@ def ski_fused_pass2_pallas(x, z, a_dense, filt, causal: bool, *,
     bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
     if bn < m:
         from repro.kernels import ref
-        return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
-    return _padded_call(x, z, a_dense, filt, causal, h, interpret, bn, bd)
+        return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal, left=left)
+    return _padded_call(x, z, a_dense, filt, left, h, interpret, bn, bd)

@@ -1,0 +1,185 @@
+"""Pallas TPU kernels for the SKI backward pass: parameter cotangents.
+
+The fused SKI pipeline is linear in the signal, so the signal cotangent is
+served by the *forward* kernels with transposed operands (see
+kernels/ski_vjp.py). What the forwards cannot produce are the parameter
+cotangents — both are correlation reductions accumulated per tile:
+
+* ``conv_tap_grad``: df[c, k] = Σ_{b,j} g[b, j, c] · x[b, j-k+left, c]
+  — the m-tap filter cotangent. Same halo'd prev/cur/next BlockSpec trick
+  as the forward conv; each (d-tile, batch, n-tile) grid step reduces its
+  window into the (bd, m) output block. The d-tile dimension is the
+  *outermost* grid axis so every revisit of an output block is consecutive
+  (the safe Pallas accumulation pattern; cf. interp_reduce's k-loop).
+
+* ``gram_grad``: dA[c, s, t] = Σ_b gz[b, s, c] · z[b, t, c]
+  — the inducing-Gram cotangent, a per-channel outer product of the two
+  rank-r reductions (gz = Wᵀg, z = Wᵀx), accumulated over the batch grid
+  axis. Output mirrors the (d, r, r) a_dense layout of the fused forward.
+
+Both accumulate in fp32 regardless of input dtype and emit fp32 (callers
+cast to the parameter dtype). Ragged n/d/r follow the backend zero-pad
+policy — padded rows multiply zero cotangents, so the sums are exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import backend
+
+
+# ----------------------------------------------------------- conv tap grad
+def _tap_grad_kernel(prev_ref, cur_ref, nxt_ref, g_ref, o_ref, *,
+                     m, left, bn, nb_total):
+    bi = pl.program_id(1)
+    ni = pl.program_id(2)
+    hl = m - 1 - left
+    hr = left
+    prev = jnp.where(ni > 0, prev_ref[0], jnp.zeros_like(prev_ref[0]))
+    nxt = jnp.where(ni < nb_total - 1, nxt_ref[0], jnp.zeros_like(nxt_ref[0]))
+    cur = cur_ref[0]
+    xwin = jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
+                           axis=0) if hl else jnp.concatenate(
+                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
+    g = g_ref[0].astype(jnp.float32)                     # (bn, bd)
+    parts = []
+    for k in range(m):
+        sl = xwin[(m - 1 - k):(m - 1 - k) + bn].astype(jnp.float32)
+        parts.append(jnp.sum(sl * g, axis=0))            # (bd,)
+    part = jnp.stack(parts, axis=1)                      # (bd, m)
+
+    @pl.when((bi == 0) & (ni == 0))
+    def _init():
+        o_ref[...] = part
+
+    @pl.when((bi > 0) | (ni > 0))
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+def _tap_grad_call_impl(g, x, m: int, left: int, *, interpret, bn, bd):
+    """Requires n % bn == 0, d % bd == 0, bn >= m (padded by the wrapper)."""
+    b, n, d = x.shape
+    nb, db = n // bn, d // bd
+    grid = (db, b, nb)
+
+    def xmap(shift):
+        def f(di, bi, ni):
+            return (bi, jnp.clip(ni + shift, 0, nb - 1), di)
+        return f
+
+    return pl.pallas_call(
+        functools.partial(_tap_grad_kernel, m=m, left=left, bn=bn,
+                          nb_total=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), xmap(-1)),
+            pl.BlockSpec((1, bn, bd), xmap(0)),
+            pl.BlockSpec((1, bn, bd), xmap(+1)),
+            pl.BlockSpec((1, bn, bd), xmap(0)),
+        ],
+        out_specs=pl.BlockSpec((bd, m), lambda di, bi, ni: (di, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, m), jnp.float32),
+        interpret=interpret,
+    )(x, x, x, g)
+
+
+def _tap_grad_padded(g, x, m, left, interpret, bn, bd):
+    b, n, d = x.shape
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    if np_ != n or dp != d:
+        pad = ((0, 0), (0, np_ - n), (0, dp - d))
+        return _tap_grad_padded_call(jnp.pad(g, pad), jnp.pad(x, pad), m,
+                                     left, interpret, bn, bd)[:d]
+    return _tap_grad_padded_call(g, x, m, left, interpret, bn, bd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "left", "interpret", "bn", "bd"))
+def _tap_grad_padded_call(g, x, m, left, interpret, bn, bd):
+    return _tap_grad_call_impl(g, x, m, left, interpret=interpret,
+                               bn=bn, bd=bd)
+
+
+def conv_tap_grad_pallas(g, x, m: int, left: int, *, interpret=None,
+                         bn=None, bd=None):
+    """df[c, k] = Σ_{b,j} g[b,j,c] x[b,j-k+left,c]; g, x: (b, n, d) → (d, m).
+
+    Matches ref.conv_tap_grad_ref. Returns fp32 (accumulator dtype).
+    """
+    b, n, d = x.shape
+    interpret = backend.resolve_interpret(interpret)
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(g, x):
+            tune = lambda BN, BD: _tap_grad_padded(g, x, m, left, interpret,
+                                                   BN, BD)
+        hbn, hbd = backend.get_blocks("conv_tap_grad", n, d, x.dtype,
+                                      interpret, tune_call=tune,
+                                      extra=f"m={m}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    if bn < m:
+        from repro.kernels import ref
+        return ref.conv_tap_grad_ref(g, x, m, left)
+    return _tap_grad_padded(g, x, m, left, interpret, bn, bd)
+
+
+# --------------------------------------------------------------- gram grad
+def _gram_grad_kernel(gz_ref, z_ref, o_ref):
+    bi = pl.program_id(1)
+    gz = gz_ref[0].astype(jnp.float32).T                 # (bd, r)
+    zz = z_ref[0].astype(jnp.float32).T                  # (bd, r)
+    part = gz[:, :, None] * zz[:, None, :]               # (bd, r, r)
+
+    @pl.when(bi == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(bi > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bd"))
+def _gram_grad_call(gz, z, *, interpret, bd):
+    b, r, d = z.shape
+    grid = (d // bd, b)
+    return pl.pallas_call(
+        _gram_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r, bd), lambda di, bi: (bi, 0, di)),
+            pl.BlockSpec((1, r, bd), lambda di, bi: (bi, 0, di)),
+        ],
+        out_specs=pl.BlockSpec((bd, r, r), lambda di, bi: (di, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, r, r), jnp.float32),
+        interpret=interpret,
+    )(gz, z)
+
+
+def gram_grad_pallas(gz, z, *, interpret=None, bd=None):
+    """dA[c,s,t] = Σ_b gz[b,s,c] z[b,t,c]; gz, z: (b, r, d) → (d, r, r).
+
+    Matches ref.gram_grad_ref. Returns fp32 (accumulator dtype). r is
+    padded to the sublane unit; padded rows/cols are exactly zero and are
+    sliced away.
+    """
+    b, r, d = z.shape
+    interpret = backend.resolve_interpret(interpret)
+    if bd is None:
+        bd = backend.fit_block(d, 128, backend.lane_unit(interpret))
+    bd = min(bd, backend.round_up(d, backend.lane_unit(interpret)))
+    rp = backend.round_up(r, 8)
+    dp = backend.round_up(d, bd)
+    if rp != r or dp != d:
+        pad = ((0, 0), (0, rp - r), (0, dp - d))
+        out = _gram_grad_call(jnp.pad(gz, pad), jnp.pad(z, pad),
+                              interpret=interpret, bd=bd)
+        return out[:d, :r, :r]
+    return _gram_grad_call(gz, z, interpret=interpret, bd=bd)

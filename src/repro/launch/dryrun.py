@@ -32,8 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (SHAPES, FULL_ATTENTION_ONLY, ShapeSpec,
-                                StepBuilder, cell_is_applicable)
+from repro.launch.steps import SHAPES, StepBuilder, cell_is_applicable
 from repro.optim import adamw
 
 ASSIGNED = [

@@ -18,7 +18,6 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import StepBuilder
 from repro.models import serving
-from repro.models.context import Ctx
 
 
 def generate(sb: StepBuilder, params, prompt, gen_len: int, *,
@@ -32,7 +31,6 @@ def generate(sb: StepBuilder, params, prompt, gen_len: int, *,
     b, p = prompt.shape
     max_len = p + gen_len
     cache = serving.init_cache(cfg, b, max_len)
-    ctx = sb.ctx
     step = jax.jit(sb.make_serve_step())
 
     key = jax.random.PRNGKey(seed)

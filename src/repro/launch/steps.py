@@ -18,8 +18,7 @@ labels); ``prefill_*`` lowers the forward (logits only); ``decode_*`` /
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

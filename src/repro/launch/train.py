@@ -21,7 +21,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke

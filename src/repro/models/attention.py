@@ -3,9 +3,6 @@ flash-style q-chunked softmax for training/prefill, and a seq-sharded
 (flash-decoding) cache path for serving."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 

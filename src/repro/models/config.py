@@ -9,7 +9,6 @@ mixer of *any* architecture.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 MIXERS = ("attention", "local", "mamba", "tno", "ski", "fd")

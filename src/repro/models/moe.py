@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ArchConfig
-from repro.models.context import Ctx, shard
+from repro.models.context import Ctx
 from repro.nn.layers import ACTS
 from repro.nn.params import KeyGen, boxed
 

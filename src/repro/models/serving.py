@@ -12,7 +12,6 @@ masking negates SKI's benefit; causal serving uses FD/TNO kernels.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -20,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.core import fd as fd_mod
 from repro.core import tno as tno_mod
-from repro.core.block import TNNBlockConfig
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models.config import ArchConfig

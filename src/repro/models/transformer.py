@@ -5,8 +5,6 @@ available as drop-in token mixers.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict
 
 import jax

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.nn.params import Box, KeyGen, boxed
+from repro.nn.params import KeyGen, boxed
 
 ACTS = {
     "relu": jax.nn.relu,
@@ -13,6 +13,20 @@ ACTS = {
     "sigmoid": jax.nn.sigmoid,
     "none": lambda x: x,
 }
+
+
+def cast_params(params, dtype):
+    """Cast every floating-point leaf of a param tree to ``dtype``.
+
+    Mixed-precision helper for the kernel training path: activations and
+    params run in bf16 while the custom-VJP kernels accumulate in fp32
+    (bf16-with-fp32-accum — see tests/test_ski_grad.py). Integer leaves
+    (e.g. data cursors) pass through untouched.
+    """
+    def f(x):
+        x = jnp.asarray(x)
+        return x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+    return jax.tree.map(f, params)
 
 
 # ---------------------------------------------------------------- dense

@@ -10,7 +10,7 @@ checkpoint layer and the sharding layer treat it like a second param tree
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -18,6 +18,11 @@ Responsibilities (DESIGN §5 "1000+-node posture"):
   hook + a counter observable by tests.
 * **NaN guard** — non-finite loss aborts the step and retries (on real
   hardware this catches SDC / chip faults; persistent NaN raises).
+* **Dispatch banner** — ``run()`` logs the kernel backend policy
+  (platform / use_pallas / pallas_grad, ``backend.describe()``) once at
+  startup: a training run silently on the wrong path (e.g. reference
+  kernels on TPU, or ``REPRO_PALLAS_GRAD=0`` left over from a debugging
+  session) is visible in the first line of the step log.
 """
 from __future__ import annotations
 
@@ -125,6 +130,8 @@ class Trainer:
 
     # -------------------------------------------------------------- run
     def run(self, state: Any, start_step: int = 0) -> Any:
+        from repro.kernels import backend
+        self.log(f"[trainer] kernel dispatch: {backend.describe()}")
         self._install_signals()
         try:
             step = start_step

@@ -2,15 +2,12 @@
 subprocess-free reuse: these tests run in the main process only when the
 device count allows; otherwise they validate the pure-python parts)."""
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.steps import (FULL_ATTENTION_ONLY, SHAPES, StepBuilder,
-                                cell_is_applicable)
-from repro.parallel.sharding import (DEFAULT_RULES, ShardingRules, spec_for)
+from repro.launch.steps import SHAPES, StepBuilder, cell_is_applicable
+from repro.parallel.sharding import ShardingRules, spec_for
 
 
 def test_cell_applicability_matrix():

@@ -7,8 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, list_archs, reduce_for_smoke
-from repro.launch.steps import StepBuilder, ShapeSpec
+from repro.configs import get_config, reduce_for_smoke
 from repro.models.context import Ctx
 from repro.models.serving import decode_step, init_cache
 from repro.models.transformer import forward, init_model, loss_fn

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fd, hilbert, ski, tno, toeplitz
+from repro.core import hilbert, ski, tno, toeplitz
 from repro.core.causal_ski import causal_ski_lowrank
 from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply,
                             inverse_time_warp)

@@ -144,3 +144,83 @@ def test_causal_mixers_never_leak_future(seed, variant):
     np.testing.assert_allclose(np.asarray(y1[:, :cut]),
                                np.asarray(y2[:, :cut]),
                                rtol=5e-3, atol=5e-3)
+
+
+# --------------------------------------------------------- PR 2: gradients
+@st.composite
+def grad_parity_case(draw):
+    """Shapes for the custom-VJP parity sweep: ragged n/d, r ≤ n, m ≥ 2."""
+    n = draw(st.integers(16, 80))
+    d = draw(st.integers(2, 12))
+    r = draw(st.integers(3, min(16, n)))
+    m = draw(st.sampled_from([2, 4, 6]))
+    causal = draw(st.booleans())
+    seed = draw(st.integers(0, 2 ** 16))
+    return n, d, r, m, causal, seed
+
+
+@settings(max_examples=10)
+@given(grad_parity_case())
+def test_fused_custom_vjp_matches_reference_grad(case):
+    """Property: for any shape/causality, jax.grad through the Pallas
+    custom-VJP fused op equals jax.grad through the reference path."""
+    from repro.core.ski import make_inducing
+    from repro.kernels import ops
+    n, d, r, m, causal, seed = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (1, n, d))
+    a = jax.random.normal(ks[1], (d, r, r))
+    filt = jax.random.normal(ks[2], (d, m)) * 0.1
+    idx_lo, w_lo, _ = make_inducing(n, r)
+
+    def loss(x, a, f, up):
+        y = ops.ski_fused_tno(x, a, f, idx_lo, w_lo, r, causal, use_pallas=up)
+        return jnp.sum(jnp.sin(y))
+
+    gp = jax.grad(lambda *t: loss(*t, True), argnums=(0, 1, 2))(x, a, filt)
+    gr = jax.grad(lambda *t: loss(*t, False), argnums=(0, 1, 2))(x, a, filt)
+    for p, q in zip(gp, gr):
+        p, q = np.asarray(p, np.float32), np.asarray(q, np.float32)
+        assert np.abs(p - q).max() <= 1e-5 * max(np.abs(q).max(), 1.0)
+
+
+@settings(max_examples=6)
+@given(st.integers(0, 2 ** 16), st.booleans())
+def test_fused_custom_vjp_bf16_grad_within_tolerance(seed, causal):
+    """Property: bf16 signal with fp32 params — kernel-path grads stay
+    within the bf16 acceptance tolerance (2e-2 relative) of the ref path."""
+    from repro.core.ski import make_inducing
+    from repro.kernels import ops
+    n, d, r, m = 48, 8, 7, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (1, n, d)).astype(jnp.bfloat16)
+    a = jax.random.normal(ks[1], (d, r, r))
+    filt = jax.random.normal(ks[2], (d, m)) * 0.1
+    idx_lo, w_lo, _ = make_inducing(n, r)
+
+    def loss(a, f, up):
+        y = ops.ski_fused_tno(x, a, f, idx_lo, w_lo, r, causal, use_pallas=up)
+        return jnp.sum(y.astype(jnp.float32))
+
+    gp = jax.grad(lambda *t: loss(*t, True), argnums=(0, 1))(a, filt)
+    gr = jax.grad(lambda *t: loss(*t, False), argnums=(0, 1))(a, filt)
+    for p, q in zip(gp, gr):
+        p, q = np.asarray(p, np.float32), np.asarray(q, np.float32)
+        assert np.abs(p - q).max() <= 2e-2 * max(np.abs(q).max(), 1.0)
+
+
+@settings(max_examples=10)
+@given(st.integers(2, 40), st.integers(1, 6), st.sampled_from([2, 3, 5]),
+       st.integers(0, 2 ** 16))
+def test_conv_grad_kernels_linear_in_cotangent(n, d, m, seed):
+    """Property: the tap-grad reduction is bilinear — scaling either input
+    scales the output (exactness of the per-tile accumulation)."""
+    left = m // 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    g = jax.random.normal(ks[0], (1, n, d))
+    x = jax.random.normal(ks[1], (1, n, d))
+    df = ref.conv_tap_grad_ref(g, x, m, left)
+    df2 = ref.conv_tap_grad_ref(2.0 * g, x, m, left)
+    np.testing.assert_allclose(np.asarray(df2), 2.0 * np.asarray(df),
+                               rtol=1e-5, atol=1e-5)
+    assert df.shape == (d, m)

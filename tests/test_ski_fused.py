@@ -2,7 +2,6 @@
 bf16 inputs, small-n fallbacks, and the backend autotune cache."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import ski, toeplitz
@@ -164,8 +163,6 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
     monkeypatch.setenv("REPRO_AUTOTUNE", "1")
     backend.clear_cache(memory_only=True)
-    x = jax.random.normal(jax.random.PRNGKey(0), (1, 96, 16))
-    filt = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
     calls = []
     tune = lambda bn, bd: calls.append((bn, bd)) or jnp.zeros(())
     blocks = backend.get_blocks("short_conv", 96, 16, jnp.float32, True,
