@@ -17,6 +17,7 @@ Results land in BENCH_ski_fused.json at the repo root.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import pathlib
 
@@ -170,13 +171,72 @@ def _fused_vs_unfused(sizes, d=64, b=4, iters=5):
     return rows
 
 
-def _write_json(rows, bwd_rows):
+def _large_r(b=2, d=16, n=8192, iters=4):
+    """ISSUE 3: fwd + bwd across the rank regimes, r ∈ {64, 512, 2048,
+    8192}. Each row times the fused pipeline twice: as the dense-Gram
+    variant (where the (d, r, r) materialisation is feasible — r ≤ 2048
+    here; at 8192 it would be 4 GB) and as the dispatched coefficient
+    variant (windowed/fft — on this CPU host both execute the reference
+    coefficient pipeline, FFT Gram; the windowed/fft split is a
+    kernel-level VMEM strategy with identical reference semantics).
+    Lands in BENCH_ski_fused.json "large_r"; CI gates that the windowed
+    variant beats the dense-Gram path at r ≥ 2048.
+    """
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for r in (64, 512, 2048, 8192):
+        cfg = SKIConfig(d=d, rank=r, filter_size=32)
+        params, _ = unbox(ski_init(key, cfg))
+        x = jax.random.normal(key, (b, n, d))
+        variant = backend.ski_rank_variant(r, d)
+        coef_variant = variant if variant != "dense" else "windowed"
+
+        def fwd(p, x, v):
+            plan = ski_plan(p, cfg, n, variant=v)
+            return jnp.sum(ski_tno_apply(p, cfg, x, plan=plan))
+
+        def make_grad(v):
+            return jax.jit(jax.grad(functools.partial(fwd, v=v)))
+
+        fns = [jax.jit(functools.partial(fwd, v=coef_variant)),
+               make_grad(coef_variant)]
+        dense_ok = r <= 2048            # (d, r, r) fits on the bench host
+        if dense_ok:
+            fns += [jax.jit(functools.partial(fwd, v="dense")),
+                    make_grad("dense")]
+        t = time_fns_interleaved(fns, params, x, iters=iters, warmup=1)
+        coef_fwd, coef_grad = t[0], t[1]
+        dense_fwd, dense_grad = (t[2], t[3]) if dense_ok else (None, None)
+
+        report(f"ski_large_r/r{r}/{coef_variant}_fwd", coef_fwd * 1e3, "ms",
+               "coefficient-Gram fused pipeline")
+        report(f"ski_large_r/r{r}/{coef_variant}_grad", coef_grad * 1e3,
+               "ms")
+        row = {"r": r, "n": n, "b": b, "d": d,
+               "variant_default": variant,
+               "coef_variant": coef_variant,
+               "coef_fwd_ms": coef_fwd * 1e3,
+               "coef_grad_ms": coef_grad * 1e3,
+               "dense_fwd_ms": dense_fwd and dense_fwd * 1e3,
+               "dense_grad_ms": dense_grad and dense_grad * 1e3}
+        if dense_ok:
+            row["fwd_speedup_vs_dense"] = dense_fwd / coef_fwd
+            row["grad_speedup_vs_dense"] = dense_grad / coef_grad
+            report(f"ski_large_r/r{r}/fwd_speedup_vs_dense",
+                   row["fwd_speedup_vs_dense"], "x",
+                   "windowed must beat dense-Gram at r >= 2048 (ISSUE 3)")
+        rows.append(row)
+    return rows
+
+
+def _write_json(rows, bwd_rows, large_r_rows):
     payload = {
         "bench": "ski_fused_vs_unfused",
         "platform": backend.platform(),
         "use_pallas_default": backend.use_pallas_default(),
         "results": rows,
         "bwd": bwd_rows,
+        "large_r": large_r_rows,
     }
     try:
         _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
@@ -198,7 +258,8 @@ def run(smoke: bool = False):
     sizes = [2048] if smoke else [2048, 8192]
     rows = _fused_vs_unfused(sizes, iters=10 if smoke else 12)
     bwd_rows = _grad_fused_vs_unfused(sizes, iters=5 if smoke else 8)
-    _write_json(rows, bwd_rows)
+    large_r_rows = _large_r(iters=3 if smoke else 5)
+    _write_json(rows, bwd_rows, large_r_rows)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hilbert import causal_spectrum
 from repro.core.rpe import MLPRPEConfig, mlp_rpe_apply, mlp_rpe_init
@@ -51,13 +52,25 @@ def fd_init(key, cfg: FDConfig):
 
 
 @functools.lru_cache(maxsize=64)
-def _omega_grid(n: int, feature: str) -> jax.Array:
+def _omega_grid_host(n: int, feature: str) -> np.ndarray:
     """rfft frequency grid (param-independent): memoised so all FD layers
-    of a model share one copy instead of rebuilding it per block (concrete
-    even when first built under a jit trace)."""
-    with jax.ensure_compile_time_eval():
-        omega = jnp.arange(n + 1, dtype=jnp.float32) / n  # omega/pi in [0,1]
-        return jnp.cos(jnp.pi * omega) if feature == "cos" else omega
+    of a model share one copy instead of rebuilding it per block.
+
+    Cached as HOST numpy, not a jax.Array: an lru_cache keyed only on
+    (n, feature) that holds device buffers pins them to whatever backend
+    was active at first call — stale (or dead) buffers leak across
+    backend/device switches (e.g. CPU-built grid reused after a TPU
+    device_put policy change). Callers device_put via jnp.asarray, which
+    is free under jit (the numpy constant is staged per-backend).
+    """
+    omega = np.arange(n + 1, dtype=np.float32) / n        # omega/pi in [0,1]
+    return np.cos(np.pi * omega, dtype=np.float32) if feature == "cos" \
+        else omega
+
+
+def _omega_grid(n: int, feature: str) -> jax.Array:
+    """Device view of the cached host grid (see _omega_grid_host)."""
+    return jnp.asarray(_omega_grid_host(n, feature))
 
 
 def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:

@@ -16,12 +16,21 @@ the TPU port does (DESIGN §3 item 1).
 
 Execution pipeline (default, ``SKIConfig.fused=True``): the **two-pass
 fused** form — pass 1 ``interp_reduce`` (z = Wᵀx), pass 2 one kernel
-fusing the dense r×r Gram contraction, the interp expansion and the short
-conv with a single output write (kernels/ski_fused.py) — exposed as the
-single differentiable op ``ops.ski_fused_tno`` whose Pallas backward is
-itself kernel launches (kernels/ski_vjp.py), so training takes the same
-path as inference. The 4-kernel unfused form (FFT Gram matvec) remains
-for r > 512 / oversized Gram and as the ``fused=False`` benchmark
+fusing the Gram contraction, the interp expansion and the short conv
+with a single output write (kernels/ski_fused.py) — exposed as a single
+differentiable op whose Pallas backward is itself kernel launches
+(kernels/ski_vjp.py), so training takes the same path as inference.
+How the Gram is applied is ``backend.ski_rank_variant``'s call (PR 3):
+
+* ``dense``    (r ≤ 512, Gram under 64 MB) — ``ops.ski_fused_tno``, the
+  whole (d, r, r) Gram VMEM-resident per d-tile;
+* ``windowed`` (≤ 4096) — ``ops.ski_fused_tno_coef``, the O(n) banded-W
+  kernel streaming (bw, bw) Toeplitz band blocks from the (d, 2r-1)
+  coefficients (the dense Gram is never materialised);
+* ``fft``      (beyond) — same op, Gram applied by a length-2r
+  rfft/irfft circulant matvec between the two passes.
+
+The 4-kernel unfused form remains as the ``fused=False`` benchmark
 baseline; its Pallas ops are individually custom-VJP'd.
 
 Forward-invariant pieces (inducing geometry, warped lag grid, Gram
@@ -40,12 +49,8 @@ import jax.numpy as jnp
 from repro.core import toeplitz
 from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply, interp_rpe_init,
                             inverse_time_warp)
-from repro.kernels import ops
+from repro.kernels import backend, ops
 from repro.nn.params import KeyGen, boxed
-
-# fused pass-2 eligibility: direct dense Gram only while it stays small
-_FUSED_RANK_MAX = 512
-_FUSED_GRAM_BYTES_MAX = 64 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,23 +108,39 @@ def inducing_gram_coeffs(params, cfg: SKIConfig, r: int, h: float):
 
 
 def fused_eligible(cfg: SKIConfig, r: int) -> bool:
-    return (cfg.fused and r <= _FUSED_RANK_MAX
-            and cfg.d * r * r * 4 <= _FUSED_GRAM_BYTES_MAX)
+    """Dense-Gram eligibility (kept for back-compat; the full policy is
+    backend.ski_rank_variant — with the large-rank variants every rank is
+    fused-eligible, this only says whether the *dense* kernel serves it)."""
+    return cfg.fused and backend.ski_rank_variant(r, cfg.d) == "dense"
 
 
-def ski_plan(params, cfg: SKIConfig, n: int, causal: bool = False) -> dict:
+def ski_plan(params, cfg: SKIConfig, n: int, causal: bool = False,
+             variant: str | None = None) -> dict:
     """Precompute everything that is invariant across ops within a forward:
-    inducing geometry, Gram coefficients, and (fused path) the dense
-    per-channel Gram. Built once per layer per forward (core/block.py);
-    serving can additionally reuse it across decode steps of equal n."""
+    inducing geometry, Gram coefficients, the Gram variant decision, and
+    (dense variant only) the dense per-channel Gram. Built once per layer
+    per forward (core/block.py); serving can additionally reuse it across
+    decode steps of equal n.
+
+    ``variant`` — optional override of ``backend.ski_rank_variant``
+    ("dense" | "windowed" | "fft"); used by the variant-parity tests and
+    the large-r benchmark to pin a strategy at a rank the policy would
+    route elsewhere. The override is UNCHECKED: forcing "dense" builds
+    the (d, r, r) Gram regardless of the byte budget (that is the point —
+    the benchmark times the dense arm past the policy ceiling), so the
+    caller owns the memory math at large r.
+    """
     r = min(cfg.rank, n)
     idx_lo, w_lo, h = make_inducing(n, r)
     a_coef = inducing_gram_coeffs(params, cfg, r, h)            # (d, 2r-1)
     if causal:
         a_coef = toeplitz.causal_mask_coeffs(a_coef, r)
+    if variant is None:
+        variant = backend.ski_rank_variant(r, cfg.d) if cfg.fused \
+            else "unfused"
     plan = {"r": r, "h": h, "idx_lo": idx_lo, "w_lo": w_lo,
-            "causal": causal, "a_coef": a_coef}
-    if fused_eligible(cfg, r):
+            "causal": causal, "a_coef": a_coef, "variant": variant}
+    if variant == "dense":
         plan["a_dense"] = toeplitz.dense_toeplitz(a_coef, r)    # (d, r, r)
     return plan
 
@@ -143,8 +164,10 @@ def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
             f"plan mismatch: built for causal={plan['causal']}, "
             f"n={plan['idx_lo'].shape[0]}; called with causal={causal}, n={n}")
     r, idx_lo, w_lo = plan["r"], plan["idx_lo"], plan["w_lo"]
+    variant = plan.get("variant",
+                       "dense" if "a_dense" in plan else "unfused")
 
-    if "a_dense" in plan:
+    if variant == "dense" and "a_dense" in plan:
         # two-pass fused pipeline as ONE differentiable op: on the Pallas
         # path this is the custom-VJP kernel pair (kernels/ski_vjp.py), so
         # jax.grad through a TNN block trains at kernel speed instead of
@@ -154,7 +177,17 @@ def ski_tno_apply(params, cfg: SKIConfig, x: jax.Array,
                               use_pallas=cfg.use_pallas)
         return y.astype(x.dtype)
 
-    # unfused 4-kernel fallback (r > 512 / fused disabled): FFT Gram matvec
+    if variant in ("windowed", "fft"):
+        # large-rank fused pipeline (PR 3): same two-pass structure, Gram
+        # in coefficient form — streamed band blocks (windowed) or a
+        # circulant rfft/irfft between the passes (fft); one differentiable
+        # op either way, so large-rank training stays on the kernel path
+        y = ops.ski_fused_tno_coef(x, plan["a_coef"], params["filt"],
+                                   idx_lo, w_lo, r, causal, variant,
+                                   use_pallas=cfg.use_pallas)
+        return y.astype(x.dtype)
+
+    # unfused 4-kernel fallback (fused disabled): FFT Gram matvec
     # (each Pallas op here carries its own custom VJP, so this path is
     # trainable too)
     z = ops.interp_reduce(x, idx_lo, w_lo, r, use_pallas=cfg.use_pallas)

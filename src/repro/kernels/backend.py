@@ -47,6 +47,25 @@ Environment knobs (also documented in :mod:`repro.kernels.ops`):
 * ``REPRO_AUTOTUNE``      — "1" enables the timing sweep on cache miss.
 * ``REPRO_AUTOTUNE_CACHE`` — cache file path
   (default ``~/.cache/repro/autotune.json``).
+
+Large-rank SKI dispatch (PR 3)
+------------------------------
+:func:`ski_rank_variant` is the single policy point that picks how the
+fused SKI pipeline applies the r×r inducing Gram:
+
+* ``dense``    — r ≤ 512 (``REPRO_SKI_DENSE_RMAX``) and the (d, r, r)
+  dense Gram under the 64 MB budget: the original fused kernel with the
+  whole Gram VMEM-resident per d-tile.
+* ``windowed`` — 512 < r ≤ 4096 (``REPRO_SKI_WINDOWED_RMAX``): the O(n)
+  banded-W kernel streaming (bw, bw) Toeplitz band blocks regenerated
+  from coefficients; the band width follows the sequence tile via
+  :func:`band_fit` under the ``REPRO_SKI_BAND_MAX`` budget (default 128).
+* ``fft``      — beyond the windowed ceiling: the Toeplitz Gram is
+  applied by a length-2r rfft/irfft circulant matvec between the two
+  kernel passes (O(r log r)); pass 2 is the Gram-free windowed kernel.
+
+The dense form needs the (d, r, r) materialisation (16 GB at r = 8192,
+d = 64) — the coefficient-form variants only ever hold (d, 2r-1).
 """
 from __future__ import annotations
 
@@ -62,6 +81,9 @@ _ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
 _ENV_GRAD = "REPRO_PALLAS_GRAD"
 _ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_ENV_DENSE_RMAX = "REPRO_SKI_DENSE_RMAX"
+_ENV_WINDOWED_RMAX = "REPRO_SKI_WINDOWED_RMAX"
+_ENV_BAND_MAX = "REPRO_SKI_BAND_MAX"
 
 _FORCED_DEFAULT: bool | None = None     # set_default_use_pallas override
 _FORCED_GRAD: bool | None = None        # set_default_pallas_grad override
@@ -139,7 +161,81 @@ def describe() -> str:
     silent wrong-path run is visible in the step log)."""
     return (f"platform={platform()} use_pallas={use_pallas_default()} "
             f"interpret={resolve_interpret()} "
-            f"pallas_grad={resolve_pallas_grad()}")
+            f"pallas_grad={resolve_pallas_grad()} "
+            f"ski_variant=(dense<={ski_dense_rank_max()}"
+            f"<windowed<={ski_windowed_rank_max()}<fft"
+            f"|band<={band_budget()})")
+
+
+# ------------------------------------------------- large-rank SKI policy
+#: dense (d, r, r) Gram budget for the original fused kernel (bytes)
+SKI_GRAM_BYTES_MAX = 64 << 20
+
+
+def _env_int(name: str, default: int) -> int:
+    v = os.environ.get(name)
+    if v is None or v == "":
+        return default
+    try:
+        return int(v)
+    except ValueError:
+        # a typo'd knob must not silently dispatch to a different kernel
+        # variant than the user believes (the describe() banner principle)
+        raise ValueError(f"{name}={v!r} is not an integer") from None
+
+
+def ski_dense_rank_max() -> int:
+    """Largest r served by the dense-Gram fused kernel (the (bd, r, r)
+    VMEM panel; paper's dense-beats-FFT observation holds to here)."""
+    return _env_int(_ENV_DENSE_RMAX, 512)
+
+
+def ski_windowed_rank_max() -> int:
+    """Largest r served by the windowed banded-W kernel; beyond it the
+    per-row O(r) band work loses to the O(log r) FFT-Gram amortisation."""
+    return _env_int(_ENV_WINDOWED_RMAX, 4096)
+
+
+def band_budget() -> int:
+    """Max Gram band width bw: per-tile band-block VMEM is bd·bw²·4 B
+    (plus the (bd, 2rp-1) coefficient line), so 128 keeps the transient
+    block ≤ 0.5 MB at the interpret-default bd=8 and ≤ 8 MB at the
+    compiled lane width bd=128."""
+    return _env_int(_ENV_BAND_MAX, 128)
+
+
+def ski_rank_variant(r: int, d: int | None = None) -> str:
+    """How the fused SKI pipeline applies the r×r inducing Gram:
+    "dense" | "windowed" | "fft" (see module docstring). ``d`` (channels)
+    feeds the dense (d, r, r) byte budget when known."""
+    if r <= ski_dense_rank_max() and (
+            d is None or d * r * r * 4 <= SKI_GRAM_BYTES_MAX):
+        return "dense"
+    if r <= ski_windowed_rank_max():
+        return "windowed"
+    return "fft"
+
+
+def band_width(bn: int, n: int, r: int) -> int:
+    """Static Gram band width covering every hat tap of a length-bn
+    sequence tile: the tile's rows span (bn-1)/h inducing columns, plus
+    one tap each side and fp32-floor slack, rounded to the sublane unit
+    and capped at the (padded) grid size."""
+    h = (n - 1) / max(1, r - 1)
+    bw = round_up(int((bn - 1) / h) + 4, 8)
+    return max(8, min(bw, round_up(r, 8)))
+
+
+def band_fit(bn: int, n: int, r: int) -> tuple[int, int]:
+    """(bn, bw) with bn shrunk (halved to the sublane floor) until the
+    band fits :func:`band_budget` — band width follows the sequence tile
+    (bw ≈ bn·r/n), so shrinking the tile is the legal way to shrink the
+    band without changing semantics."""
+    bw = band_width(bn, n, r)
+    while bw > band_budget() and bn > 8:
+        bn = max(8, round_up(bn // 2, 8))
+        bw = band_width(bn, n, r)
+    return bn, bw
 
 
 # ---------------------------------------------------------- shape fitting
@@ -171,6 +267,8 @@ _DEFAULT_TARGETS = {
     "interp_reduce": (256, 128),
     "interp_expand": (256, 128),
     "ski_fused": (256, 128),
+    "ski_windowed": (256, 128),
+    "ski_expand2": (256, 128),
     "conv_tap_grad": (256, 128),
 }
 

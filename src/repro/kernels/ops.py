@@ -105,6 +105,31 @@ def ski_fused_tno(x, a_dense, filt, idx_lo, w_lo, r: int, causal: bool, *,
     return ref.ski_fused_tno_ref(x, a_dense, filt, idx_lo, w_lo, r, causal)
 
 
+def ski_fused_tno_coef(x, a_coef, filt, idx_lo, w_lo, r: int, causal: bool,
+                       variant: str = "windowed", *, use_pallas=None,
+                       interpret=None):
+    """Large-rank differentiable fused SKI-TNO, coefficient-form Gram.
+
+    x (b,n,d); a_coef (d,2r-1) Toeplitz lags of the inducing Gram (the
+    dense (d,r,r) form is never materialised — 16 GB at r=8192, d=64);
+    filt (d,m); idx_lo/w_lo: inducing geometry (ref path only). ``variant``
+    is "windowed" (banded-W kernel streaming (bw,bw) Gram band blocks) or
+    "fft" (rfft/irfft circulant Gram between the passes) — pick via
+    ``backend.ski_rank_variant``. Both execution strategies compute the
+    same operator and share the oracle ref.ski_fused_tno_coef_ref; the
+    Pallas path carries a custom VJP whose signal cotangent is the same
+    windowed kernel with the band transposed (coefficients lag-flipped)
+    and the conv offset mirrored (kernels/ski_vjp.py).
+    """
+    if backend.resolve_use_pallas(use_pallas):
+        from repro.kernels import ski_vjp as k
+        return k.ski_fused_tno_coef_pallas(
+            x, a_coef, filt, int(r), bool(causal), str(variant),
+            backend.resolve_interpret(interpret))
+    return ref.ski_fused_tno_coef_ref(x, a_coef, filt, idx_lo, w_lo, r,
+                                      causal)
+
+
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
              interpret=None, hshard=None):
     """Mamba-2 SSD. See ref.ssd_scan_ref for shapes."""

@@ -151,14 +151,14 @@ def gram_grad_ref(gz: jax.Array, z: jax.Array) -> jax.Array:
 
 
 # ----------------------------------------------------- fused SKI pass 2
-def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
-                        filt: jax.Array, causal: bool,
-                        left: int | None = None) -> jax.Array:
-    """Oracle for kernels/ski_fused.py: y = W (A z) + T_sparse x.
+def ski_expand_pass2_ref(x: jax.Array, z2: jax.Array, filt: jax.Array,
+                         causal: bool, left: int | None = None) -> jax.Array:
+    """Gram-free half of pass 2: y = W z2 + T_sparse x.
 
-    x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r); filt: (d, m).
-    fp32 accumulation throughout, cast back to x.dtype at the end.
-    ``left`` overrides the causal-derived tap offset (backward siblings).
+    x: (b, n, d); z2 = A (Wᵀx): (b, r, d); filt: (d, m). This is the
+    oracle for kernels/ski_fused.ski_expand_pass2_pallas (the FFT-Gram
+    variant's second pass — the Gram matvec already happened) and the
+    shared tail of :func:`ski_fused_pass2_ref`.
 
     The expansion uses W's banded structure (≤2 non-zeros/row → two row
     gathers + blend, the paper's O(n) action) instead of the dense (n, r)
@@ -167,15 +167,14 @@ def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
     MXU form (TPU crossover, kernels/interp_matvec.py docstring).
     """
     n = x.shape[1]
-    r = z.shape[1]
+    r = z2.shape[1]
     m = filt.shape[-1]
-    z2 = jnp.einsum("dst,btd->bsd", a_dense.astype(jnp.float32),
-                    z.astype(jnp.float32))
     # banded W row weights, identical construction to ski.make_inducing
     h = (n - 1) / (r - 1)
     f = jnp.arange(n, dtype=jnp.float32) / h
     lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
     w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)[None, :, None]
+    z2 = z2.astype(jnp.float32)
     y = w_lo * z2[:, lo, :] + (1.0 - w_lo) * z2[:, lo + 1, :]
     if left is None or left == (0 if causal else m // 2):
         y_sp = short_conv_ref(x, filt, causal)    # analytic custom-VJP form
@@ -183,6 +182,20 @@ def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
         y_sp = short_conv_left_ref(x, filt, left)
     y = y + y_sp.astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def ski_fused_pass2_ref(x: jax.Array, z: jax.Array, a_dense: jax.Array,
+                        filt: jax.Array, causal: bool,
+                        left: int | None = None) -> jax.Array:
+    """Oracle for kernels/ski_fused.py: y = W (A z) + T_sparse x.
+
+    x: (b, n, d); z = Wᵀx: (b, r, d); a_dense: (d, r, r); filt: (d, m).
+    fp32 accumulation throughout, cast back to x.dtype at the end.
+    ``left`` overrides the causal-derived tap offset (backward siblings).
+    """
+    z2 = jnp.einsum("dst,btd->bsd", a_dense.astype(jnp.float32),
+                    z.astype(jnp.float32))
+    return ski_expand_pass2_ref(x, z2, filt, causal, left=left)
 
 
 def ski_fused_tno_ref(x: jax.Array, a_dense: jax.Array, filt: jax.Array,
@@ -195,6 +208,43 @@ def ski_fused_tno_ref(x: jax.Array, a_dense: jax.Array, filt: jax.Array,
     short-conv analytic VJP)."""
     z = interp_reduce_ref(x, idx_lo, w_lo, r)
     return ski_fused_pass2_ref(x, z, a_dense, filt, causal)
+
+
+def toeplitz_gram_matvec_ref(a_coef: jax.Array, z: jax.Array) -> jax.Array:
+    """z2 = A z for the COEFFICIENT-form Gram: a_coef (d, 2r-1) Toeplitz
+    lags -(r-1)..(r-1); z (b, r, d) -> (b, r, d). O(r log r) circulant
+    rfft/irfft — the only Gram action that exists at large rank, where
+    the dense (d, r, r) materialisation does not fit (r=8192, d=64 →
+    16 GB)."""
+    from repro.core import toeplitz
+    zt = jnp.swapaxes(z, 1, 2)                              # (b, d, r)
+    z2t = toeplitz.toeplitz_matvec(a_coef[None], zt)
+    return jnp.swapaxes(z2t, 1, 2)                          # (b, r, d)
+
+
+def ski_fused_tno_coef_ref(x: jax.Array, a_coef: jax.Array, filt: jax.Array,
+                           idx_lo: jax.Array, w_lo: jax.Array, r: int,
+                           causal: bool) -> jax.Array:
+    """Large-rank fused SKI-TNO, coefficient form: the semantics contract
+    for BOTH kernels/ski_vjp.ski_fused_tno_coef_pallas variants (windowed
+    banded-W and FFT-Gram — they are two execution strategies for the same
+    operator). a_coef: (d, 2r-1). Differentiable via plain autodiff."""
+    z = interp_reduce_ref(x, idx_lo, w_lo, r)
+    z2 = toeplitz_gram_matvec_ref(a_coef, z)
+    return ski_expand_pass2_ref(x, z2, filt, causal)
+
+
+def gram_coef_grad_ref(gz: jax.Array, z: jax.Array) -> jax.Array:
+    """Coefficient-Gram cotangent oracle (small r, O(r²) — tests only):
+    dcoef[c, k] = Σ_{b, s-t = k-(r-1)} gz[b,s,c] z[b,t,c] → (d, 2r-1),
+    i.e. the diagonal sums of the dense Gram cotangent gz zᵀ. The
+    production form is kernels/ski_grad.gram_coef_grad_fft."""
+    r = z.shape[1]
+    da = gram_grad_ref(gz, z)                               # (d, r, r)
+    i = jnp.arange(r)
+    lag = i[:, None] - i[None, :] + (r - 1)                 # (r, r) in [0, 2r-2]
+    out = jnp.zeros((z.shape[2], 2 * r - 1), jnp.float32)
+    return out.at[:, lag].add(da)
 
 
 # ------------------------------------------------------------- mamba2 SSD

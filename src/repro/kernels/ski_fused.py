@@ -29,6 +29,37 @@ to an arbitrary ``left`` so that this same kernel serves as its own
 backward sibling — dx = W (Aᵀ (Wᵀ g)) + T_sparseᵀ g is exactly this
 kernel launched on the cotangent with A transposed, the taps flipped and
 left mirrored to m-1-left (see kernels/ski_vjp.py for the custom VJP).
+
+Large-rank variants (PR 3)
+--------------------------
+The dense-Gram kernel above pins the whole (bd, r, r) Gram per d-tile in
+VMEM — a hard r ≤ 512 ceiling (and at r = 8192 the (d, r, r) HBM
+materialisation itself is ~16 GB, so the dense form cannot even be built).
+Two variants remove the ceiling; both consume the Gram in *Toeplitz
+coefficient* form a_coef (d, 2r-1) and share the jnp oracle
+``ref.ski_fused_tno_coef_ref``:
+
+* ``ski_windowed_pass2_pallas`` — the windowed O(n) banded-W form. Each
+  row of W has ≤ 2 interpolation taps, so a length-bn sequence tile only
+  ever reads a window of ``bw ≈ bn/h + O(1)`` rows of z₂ = A z. The
+  kernel computes exactly that window per tile, streaming the Gram as
+  kb = rp/bw Toeplitz **(bw, bw) band blocks** regenerated in VMEM from a
+  (2bw-1) coefficient slice (static shifted slices — no gather), each
+  contracted on the MXU against the matching z chunk. Per-tile VMEM is
+  O(bd·bw²) + the (bd, 2rp-1) coefficient line + the (rp, bd) z tile —
+  never an (r, r) panel. Total Gram MACs are b·d·r² across the grid, the
+  same as the dense kernel's once-per-d-tile contraction (windows of
+  adjacent tiles overlap by ≤ 2 rows).
+* ``ski_expand_pass2_pallas`` — the Gram-free second pass for the
+  FFT-Gram variant: z₂ = A z is applied *outside* (rfft/irfft circulant
+  matvec, O(r log r) — see ski_vjp) and this kernel fuses the windowed
+  hat-weight expansion of z₂ with the short conv and the single output
+  write. Used when r is beyond the windowed band budget, where the
+  O(r²/n) per-row band work loses to O(r log r / r) FFT work.
+
+The backward of both is the same kernel with the coefficients flipped
+(Aᵀ of a Toeplitz matrix = lag-reversed coefficients), the taps flipped
+and left mirrored — the "transposed band" of ISSUE 3.
 """
 from __future__ import annotations
 
@@ -41,6 +72,35 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import backend
 from repro.kernels.interp_matvec import _hat_weights
+
+
+def _halo_window(prev_ref, cur_ref, nxt_ref, *, m, left, bn, nb_total, ni):
+    """(bn + m - 1, bd) sequence window assembled from halo'd
+    prev/cur/next VMEM tiles, boundary tiles zero-masked. The single
+    definition of the conv halo semantics — used by the forward conv of
+    every pass-2 kernel here AND by its transposed sibling
+    ``ski_grad._tap_grad_kernel`` (which must window identically)."""
+    hl = m - 1 - left
+    hr = left
+    prev = jnp.where(ni > 0, prev_ref[0], jnp.zeros_like(prev_ref[0]))
+    nxt = jnp.where(ni < nb_total - 1, nxt_ref[0], jnp.zeros_like(nxt_ref[0]))
+    cur = cur_ref[0]
+    return jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
+                           axis=0) if hl else jnp.concatenate(
+                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
+
+
+def _conv_halo_acc(prev_ref, cur_ref, nxt_ref, filt_ref, acc, *,
+                   m, left, bn, nb_total, ni):
+    """Add the m-tap short conv over halo'd prev/cur/next VMEM tiles (VPU)
+    into ``acc`` (bn, bd) — the sparse half shared by every pass-2 kernel."""
+    xwin = _halo_window(prev_ref, cur_ref, nxt_ref, m=m, left=left, bn=bn,
+                        nb_total=nb_total, ni=ni)
+    f = filt_ref[...].astype(jnp.float32)                # (bd, m)
+    for k in range(m):
+        sl = xwin[(m - 1 - k):(m - 1 - k) + bn].astype(jnp.float32)
+        acc = acc + sl * f[:, k][None, :]
+    return acc
 
 
 def _fused_kernel(prev_ref, cur_ref, nxt_ref, z_ref, a_ref, filt_ref, o_ref,
@@ -59,21 +119,8 @@ def _fused_kernel(prev_ref, cur_ref, nxt_ref, z_ref, a_ref, filt_ref, o_ref,
     # low-rank half: y_low = W_tile z2 (MXU)
     w = _hat_weights(ni * bn, bn, r, h)                  # (bn, r)
     acc = jnp.dot(w, z2_ref[...], preferred_element_type=jnp.float32)
-
-    # sparse half: m-tap short conv over halo'd VMEM tiles (VPU)
-    hl = m - 1 - left
-    hr = left
-    prev = jnp.where(ni > 0, prev_ref[0], jnp.zeros_like(prev_ref[0]))
-    nxt = jnp.where(ni < nb_total - 1, nxt_ref[0], jnp.zeros_like(nxt_ref[0]))
-    cur = cur_ref[0]
-    xwin = jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
-                           axis=0) if hl else jnp.concatenate(
-                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
-    f = filt_ref[...].astype(jnp.float32)                # (bd, m)
-    for k in range(m):
-        sl = xwin[(m - 1 - k):(m - 1 - k) + bn].astype(jnp.float32)
-        acc = acc + sl * f[:, k][None, :]
-
+    acc = _conv_halo_acc(prev_ref, cur_ref, nxt_ref, filt_ref, acc,
+                         m=m, left=left, bn=bn, nb_total=nb_total, ni=ni)
     o_ref[0] = acc.astype(o_ref.dtype)                   # single write
 
 
@@ -156,3 +203,203 @@ def ski_fused_pass2_pallas(x, z, a_dense, filt, causal: bool, *,
         from repro.kernels import ref
         return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal, left=left)
     return _padded_call(x, z, a_dense, filt, left, h, interpret, bn, bd)
+
+
+# ---------------------------------------------------- large-rank variants
+def _windowed_kernel(prev_ref, cur_ref, nxt_ref, z_ref, *rest, m, left, bn,
+                     w0_max, bw, h, nb_total, banded):
+    if banded:
+        fc_ref, filt_ref, o_ref = rest
+    else:
+        filt_ref, o_ref = rest
+    ni = pl.program_id(2)
+    s = ni * bn
+    sf = s.astype(jnp.float32)
+    # first inducing column touched by this tile's hat rows, clamped so the
+    # static-width window stays inside the (padded) inducing grid
+    w0 = jnp.clip(jnp.floor(sf / h).astype(jnp.int32), 0, w0_max)
+
+    if banded:
+        # z2 window = A[w0:w0+bw, :] z, streamed as kb Toeplitz (bw, bw)
+        # band blocks regenerated from the flipped coefficient line:
+        # A[w0+j, t] = fc[(rp-1-w0) + t - j]  (fc = lag-reversed, padded)
+        fc = fc_ref[...].astype(jnp.float32)             # (bd, 2rp-1)
+        z = z_ref[0].astype(jnp.float32)                 # (rp, bd)
+        bd = fc.shape[0]
+        rp = z.shape[0]
+        s0 = (rp - 1) - w0
+        kb = rp // bw
+
+        def body(k, acc):
+            cs = s0 - (bw - 1) + k * bw
+            csl = jax.lax.dynamic_slice(fc, (0, cs), (bd, 2 * bw - 1))
+            # block[c, j, u] = fc[c, s0 + k*bw + u - j]: bw static shifted
+            # slices of the (2bw-1) line — no gather
+            block = jnp.stack(
+                [csl[:, bw - 1 - j:2 * bw - 1 - j] for j in range(bw)],
+                axis=1)                                  # (bd, bw, bw)
+            zc = jax.lax.dynamic_slice(z, (k * bw, 0), (bw, bd)).T
+            return acc + jax.lax.dot_general(
+                block, zc, (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)      # (bd, bw)
+
+        z2w = jax.lax.fori_loop(
+            0, kb, body, jnp.zeros((bd, bw), jnp.float32)).T   # (bw, bd)
+    else:
+        # FFT-Gram variant: z_ref already holds z2 = A z; just window it
+        bd = z_ref.shape[2]
+        z2w = jax.lax.dynamic_slice(z_ref[0].astype(jnp.float32),
+                                    (w0, 0), (bw, bd))   # (bw, bd)
+
+    # windowed hat-weight expansion: w[i, j] = hat((s+i)/h - (w0+j)) (MXU)
+    i = jax.lax.broadcasted_iota(jnp.float32, (bn, bw), 0) + sf
+    j = jax.lax.broadcasted_iota(jnp.float32, (bn, bw), 1) + \
+        w0.astype(jnp.float32)
+    wwin = jnp.maximum(0.0, 1.0 - jnp.abs(i / h - j))
+    acc = jnp.dot(wwin, z2w, preferred_element_type=jnp.float32)
+    acc = _conv_halo_acc(prev_ref, cur_ref, nxt_ref, filt_ref, acc,
+                         m=m, left=left, bn=bn, nb_total=nb_total, ni=ni)
+    o_ref[0] = acc.astype(o_ref.dtype)                   # single write
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "left", "h", "w0_max", "banded", "interpret", "bn", "bd", "bw"))
+def _windowed_call(x, z, fc, filt, left: int, h: float, w0_max: int, *,
+                   banded, interpret, bn, bd, bw):
+    """Requires n % bn == 0, d % bd == 0, bn >= m, z rows padded to rp
+    (a multiple of bw when banded) — all arranged by _windowed_padded."""
+    b, n, d = x.shape
+    rp = z.shape[1]
+    m = filt.shape[-1]
+    nb, db = n // bn, d // bd
+    grid = (b, db, nb)
+
+    def xmap(shift):
+        def f(bi, di, ni):
+            return (bi, jnp.clip(ni + shift, 0, nb - 1), di)
+        return f
+
+    in_specs = [
+        pl.BlockSpec((1, bn, bd), xmap(-1)),
+        pl.BlockSpec((1, bn, bd), xmap(0)),
+        pl.BlockSpec((1, bn, bd), xmap(+1)),
+        pl.BlockSpec((1, rp, bd), lambda bi, di, ni: (bi, 0, di)),
+    ]
+    args = [x, x, x, z]
+    if banded:
+        in_specs.append(pl.BlockSpec((bd, 2 * rp - 1),
+                                     lambda bi, di, ni: (di, 0)))
+        args.append(fc)
+    in_specs.append(pl.BlockSpec((bd, m), lambda bi, di, ni: (di, 0)))
+    args.append(filt)
+
+    return pl.pallas_call(
+        functools.partial(_windowed_kernel, m=m, left=left, bn=bn,
+                          w0_max=w0_max, bw=bw, h=h, nb_total=nb,
+                          banded=banded),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bn, bd), lambda bi, di, ni: (bi, ni, di)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def _windowed_padded(x, z, a_coef, filt, left, h, r, banded, interpret,
+                     bn, bd, bw):
+    b, n, d = x.shape
+    # rp: multiple of bw (banded chunk loop) or of the sublane unit
+    rp = backend.round_up(r, bw) if banded else max(backend.round_up(r, 8), bw)
+    np_, dp = backend.round_up(n, bn), backend.round_up(d, bd)
+    w0_max = max(0, r - bw)
+    if np_ != n or dp != d:
+        x = jnp.pad(x, ((0, 0), (0, np_ - n), (0, dp - d)))
+        filt = jnp.pad(filt, ((0, dp - d), (0, 0)))
+    if rp != r or dp != d:
+        z = jnp.pad(z, ((0, 0), (0, rp - r), (0, dp - d)))
+    fc = None
+    if banded:
+        # lag-reversed coefficients (A[s,t] lookup becomes a forward slice),
+        # symmetric-padded to rank rp: extra |lag| >= r coefficients are
+        # zero, so padded z rows / window rows contribute exactly nothing
+        fc = jnp.flip(a_coef, axis=-1)
+        fc = jnp.pad(fc, ((0, dp - d), (rp - r, rp - r)))
+    out = _windowed_call(x, z, fc, filt, left, h, w0_max, banded=banded,
+                         interpret=interpret, bn=bn, bd=bd, bw=bw)
+    return out[:, :n, :d]
+
+
+def _coef_ref_fallback(x, z2_or_z, a_coef, filt, causal, left):
+    from repro.kernels import ref
+    if a_coef is not None:
+        z2 = ref.toeplitz_gram_matvec_ref(a_coef, z2_or_z)
+    else:
+        z2 = z2_or_z
+    return ref.ski_expand_pass2_ref(x, z2, filt, causal, left=left)
+
+
+def _windowed_wrapper(x, z, a_coef, filt, causal, banded, interpret,
+                      bn, bd, bw, left):
+    """Shared block/band resolution + tiny-shape fallback for the two
+    large-rank pass-2 wrappers."""
+    b, n, d = x.shape
+    r = z.shape[1]
+    m = filt.shape[-1]
+    if left is None:
+        left = 0 if causal else m // 2
+    interpret = backend.resolve_interpret(interpret)
+    if r < 2:
+        return _coef_ref_fallback(x, z, a_coef, filt, causal, left)
+    h = (n - 1) / (r - 1)
+    kern = "ski_windowed" if banded else "ski_expand2"
+    if bn is None or bd is None:
+        tune = None
+        if backend.is_concrete(x, z, filt) and (
+                a_coef is None or backend.is_concrete(a_coef)):
+            def tune(BN, BD):
+                BN, BW = backend.band_fit(BN, n, r)
+                return _windowed_padded(x, z, a_coef, filt, left, h, r,
+                                        banded, interpret, BN, BD, BW)
+        hbn, hbd = backend.get_blocks(kern, n, d, x.dtype, interpret,
+                                      tune_call=tune, extra=f"r={r}|m={m}")
+        bn = bn or hbn
+        bd = bd or hbd
+    bn, bd = backend.clamp_blocks(bn, bd, n, d, interpret)
+    if bw is None:
+        bn, bw = backend.band_fit(bn, n, r)
+    if bn < m:
+        return _coef_ref_fallback(x, z, a_coef, filt, causal, left)
+    return _windowed_padded(x, z, a_coef, filt, left, h, r, banded,
+                            interpret, bn, bd, bw)
+
+
+def ski_windowed_pass2_pallas(x, z, a_coef, filt, causal: bool, *,
+                              interpret=None, bn=None, bd=None, bw=None,
+                              left=None):
+    """Windowed O(n) banded-W pass 2: y = W (A z) + T_sparse x, with the
+    Gram consumed in Toeplitz-coefficient form and streamed as (bw, bw)
+    band blocks per sequence tile — no (r, r) panel ever exists, in VMEM
+    or HBM.
+
+    x: (b, n, d); z = Wᵀx: (b, r, d); a_coef: (d, 2r-1) lags -(r-1)..r-1;
+    filt: (d, m). Matches ref.ski_fused_tno_coef_ref's pass 2 (i.e.
+    toeplitz_gram_matvec_ref + ski_expand_pass2_ref). ``left`` overrides
+    the causal-derived tap offset; the backward sibling is this same
+    kernel with ``a_coef`` lag-flipped (transposed band), taps flipped
+    and left mirrored.
+    """
+    return _windowed_wrapper(x, z, a_coef, filt, causal, True, interpret,
+                             bn, bd, bw, left)
+
+
+def ski_expand_pass2_pallas(x, z2, filt, causal: bool, *, interpret=None,
+                            bn=None, bd=None, bw=None, left=None):
+    """Gram-free windowed pass 2 for the FFT-Gram variant: y = W z2 +
+    T_sparse x where z2 = A z was applied outside via rfft/irfft.
+
+    x: (b, n, d); z2: (b, r, d); filt: (d, m). Matches
+    ref.ski_expand_pass2_ref. Same windowed hat-weight expansion as the
+    banded kernel — each tile reads only its (bw, bd) window of z2.
+    """
+    return _windowed_wrapper(x, z2, None, filt, causal, False, interpret,
+                             bn, bd, bw, left)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import backend
+from repro.kernels.ski_fused import _halo_window
 
 
 # ----------------------------------------------------------- conv tap grad
@@ -37,14 +38,9 @@ def _tap_grad_kernel(prev_ref, cur_ref, nxt_ref, g_ref, o_ref, *,
                      m, left, bn, nb_total):
     bi = pl.program_id(1)
     ni = pl.program_id(2)
-    hl = m - 1 - left
-    hr = left
-    prev = jnp.where(ni > 0, prev_ref[0], jnp.zeros_like(prev_ref[0]))
-    nxt = jnp.where(ni < nb_total - 1, nxt_ref[0], jnp.zeros_like(nxt_ref[0]))
-    cur = cur_ref[0]
-    xwin = jnp.concatenate([prev[bn - hl:], cur] + ([nxt[:hr]] if hr else []),
-                           axis=0) if hl else jnp.concatenate(
-                               [cur] + ([nxt[:hr]] if hr else []), axis=0)
+    # identical halo semantics to the forward conv this kernel transposes
+    xwin = _halo_window(prev_ref, cur_ref, nxt_ref, m=m, left=left, bn=bn,
+                        nb_total=nb_total, ni=ni)
     g = g_ref[0].astype(jnp.float32)                     # (bn, bd)
     parts = []
     for k in range(m):
@@ -161,6 +157,30 @@ def _gram_grad_call(gz, z, *, interpret, bd):
         out_shape=jax.ShapeDtypeStruct((d, r, r), jnp.float32),
         interpret=interpret,
     )(gz, z)
+
+
+# -------------------------------------------------------- gram coef grad
+def gram_coef_grad_fft(gz, z):
+    """Coefficient-Gram cotangent: dcoef[c, k] = Σ_{b,t} gz[b, t+lag, c] ·
+    z[b, t, c] with lag = k - (r-1); gz, z: (b, r, d) → (d, 2r-1) fp32.
+
+    The large-rank siblings of :func:`gram_grad_pallas` cannot exist as a
+    per-tile (r, r) reduction — the dense cotangent they would accumulate
+    is exactly the (d, r, r) panel the forward variants avoid (16 GB at
+    r = 8192, d = 64). The Toeplitz structure collapses it to diagonal
+    sums, i.e. a cross-correlation of the two rank-r reductions, served
+    here by a length-2r rfft/irfft (O(r log r); the FFT *is* the kernel —
+    XLA's, not Pallas). Matches ref.gram_coef_grad_ref.
+    """
+    b, r, d = z.shape
+    two_r = 2 * r
+    gs = jnp.fft.rfft(gz.astype(jnp.float32), n=two_r, axis=1)
+    zs = jnp.fft.rfft(z.astype(jnp.float32), n=two_r, axis=1)
+    spec = jnp.sum(gs * jnp.conj(zs), axis=0)               # (r+1, d)
+    c = jnp.fft.irfft(spec, n=two_r, axis=0)                # (2r, d) circular
+    # circular correlation: lag k at c[k] (k ≥ 0), lag -k at c[2r - k]
+    out = jnp.concatenate([c[r + 1:], c[:r]], axis=0)       # lags -(r-1)..r-1
+    return out.T                                            # (d, 2r-1)
 
 
 def gram_grad_pallas(gz, z, *, interpret=None, bd=None):

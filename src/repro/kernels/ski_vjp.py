@@ -36,10 +36,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import toeplitz
 from repro.kernels import backend, ref
 from repro.kernels.interp_matvec import interp_reduce_pallas
-from repro.kernels.ski_fused import ski_fused_pass2_pallas
-from repro.kernels.ski_grad import conv_tap_grad_pallas, gram_grad_pallas
+from repro.kernels.ski_fused import (ski_expand_pass2_pallas,
+                                     ski_fused_pass2_pallas,
+                                     ski_windowed_pass2_pallas)
+from repro.kernels.ski_grad import (conv_tap_grad_pallas, gram_coef_grad_fft,
+                                    gram_grad_pallas)
 
 # trace-time instrumentation: which fwd/bwd path actually ran (tests +
 # trainer banner assert on this — the whole point of PR 2 is that training
@@ -109,3 +113,92 @@ def _bwd(r, causal, interpret, res, g):
 
 
 ski_fused_tno_pallas.defvjp(_fwd, _bwd)
+
+
+# ------------------------------------------------ large-rank coef variants
+def _gram_fft(a_coef, z):
+    """z2 = A z via the length-2r circulant rfft/irfft (the FFT-Gram step
+    'inside the pipeline'); z: (b, r, d)."""
+    zt = jnp.swapaxes(z, 1, 2)                           # (b, d, r)
+    z2t = toeplitz.toeplitz_matvec(a_coef[None], zt)
+    return jnp.swapaxes(z2t, 1, 2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def ski_fused_tno_coef_pallas(x, a_coef, filt, r: int, causal: bool,
+                              variant: str, interpret: bool):
+    """Large-rank differentiable fused SKI-TNO, Toeplitz-coefficient form.
+
+    y = W (A (Wᵀ x)) + T_sparse x with A given as a_coef (d, 2r-1) —
+    never materialised dense. ``variant``:
+
+    * "windowed" — pass 2 is the banded-W kernel streaming (bw, bw) Gram
+      band blocks (ski_fused.ski_windowed_pass2_pallas).
+    * "fft"      — the Gram is applied between the passes by a length-2r
+      rfft/irfft circulant matvec; pass 2 is the Gram-free windowed
+      expand+conv kernel (ski_fused.ski_expand_pass2_pallas).
+
+    Matches ref.ski_fused_tno_coef_ref. ``interpret`` and ``variant``
+    must be resolved by the caller (static nondiff arguments).
+    """
+    z = interp_reduce_pallas(x, None, None, r, interpret=interpret)
+    if variant == "windowed":
+        return ski_windowed_pass2_pallas(x, z, a_coef, filt, causal,
+                                         interpret=interpret)
+    return ski_expand_pass2_pallas(x, _gram_fft(a_coef, z), filt, causal,
+                                   interpret=interpret)
+
+
+def _coef_fwd(x, a_coef, filt, r, causal, variant, interpret):
+    counters["fwd"] += 1
+    y = ski_fused_tno_coef_pallas(x, a_coef, filt, r, causal, variant,
+                                  interpret)
+    return y, (x, a_coef, filt)
+
+
+def _coef_bwd_ref_formulas(x, a_coef, filt, r, causal, g):
+    """jnp reference cotangents (REPRO_PALLAS_GRAD=0 escape hatch)."""
+    n = x.shape[1]
+    w = ref.hat_interp_matrix(n, r)                      # (n, r) constants
+
+    def f(x_, a_, f_):
+        z = jnp.einsum("nr,bnd->brd", w, x_.astype(jnp.float32)).astype(
+            x_.dtype)
+        z2 = _gram_fft(a_, z)
+        return ref.ski_expand_pass2_ref(x_, z2, f_, causal)
+
+    _, vjp = jax.vjp(f, x, a_coef, filt)
+    return vjp(g)
+
+
+def _coef_bwd(r, causal, variant, interpret, res, g):
+    x, a_coef, filt = res
+    if not backend.resolve_pallas_grad():
+        counters["bwd_ref"] += 1
+        return _coef_bwd_ref_formulas(x, a_coef, filt, r, causal, g)
+    counters["bwd_kernel"] += 1
+    m = filt.shape[-1]
+    left = 0 if causal else m // 2
+    gz = interp_reduce_pallas(g, None, None, r, interpret=interpret)
+    z = interp_reduce_pallas(x, None, None, r, interpret=interpret)
+    # signal cotangent: transposed band — Aᵀ of a Toeplitz matrix is the
+    # lag-reversed coefficient line; taps flipped, offset mirrored
+    coef_t = jnp.flip(a_coef, axis=-1)
+    filt_t = jnp.flip(filt, axis=-1)
+    if variant == "windowed":
+        dx = ski_windowed_pass2_pallas(g, gz, coef_t, filt_t, causal,
+                                       interpret=interpret,
+                                       left=m - 1 - left)
+    else:
+        dx = ski_expand_pass2_pallas(g, _gram_fft(coef_t, gz), filt_t,
+                                     causal, interpret=interpret,
+                                     left=m - 1 - left)
+    # parameter cotangents: FFT diagonal-sum correlation (coefficient
+    # form of gram_grad — the dense (d, r, r) panel must never exist)
+    dcoef = gram_coef_grad_fft(gz, z)
+    df = conv_tap_grad_pallas(g, x, m, left, interpret=interpret)
+    return (dx.astype(x.dtype), dcoef.astype(a_coef.dtype),
+            df.astype(filt.dtype))
+
+
+ski_fused_tno_coef_pallas.defvjp(_coef_fwd, _coef_bwd)

@@ -1,0 +1,154 @@
+"""Oracle/property layer for the discrete Hilbert transform (paper §3.3.1).
+
+Pins the production FFT form ``discrete_hilbert`` against the paper's
+Definition-1 convolution oracle ``discrete_hilbert_conv`` (the periodised
+2/(πl) kernel), and asserts the causal-spectrum construction is *exactly*
+causal — ``irfft(causal_spectrum(u))`` vanishes on lags n+1..2n-1 — across
+dtypes and odd/even n. Deterministic sweeps always run; the hypothesis
+property versions (random draws over sizes/seeds) run whenever hypothesis
+is installed (requirements-dev.txt — CI always has it).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hilbert
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+
+    # per-test settings, NOT a global load_profile: mutating the active
+    # profile at import time would leak deadline=None/max_examples into
+    # every other module's hypothesis tests for the whole pytest session
+    _settings = hypothesis.settings(
+        deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategies:
+        """Keeps @given(...) decorators importable when hypothesis is
+        absent; the tests themselves are skipped via needs_hypothesis."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
+
+    def given(*a, **k):
+        return lambda f: f
+
+    def _settings(f):
+        return f
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+TOL = {jnp.float32: 1e-4, jnp.bfloat16: 3e-2}
+
+
+def _rel_max(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    return float(np.abs(got - want).max() / (np.abs(want).max() + 1e-12))
+
+
+# --------------------------------------- FFT form vs Definition-1 oracle
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m", [4, 6, 16, 34, 64, 130])   # even (oracle domain)
+def test_hilbert_fft_matches_conv_oracle(m, dtype):
+    """The O(n log n) FFT Hilbert == the paper's periodised-convolution
+    Definition 1, on its even-period domain."""
+    u = jax.random.normal(jax.random.PRNGKey(m), (3, m)).astype(dtype)
+    got = hilbert.discrete_hilbert(u)
+    assert got.dtype == dtype
+    want = hilbert.discrete_hilbert_conv(u.astype(jnp.float32))
+    assert _rel_max(got, want) <= TOL[dtype]
+
+
+def test_hilbert_annihilates_dc_and_nyquist():
+    """DC and the Nyquist line are in the kernel of H (sign(freq) is zero
+    at 0 and, for the fft layout, ±π is its own negative)."""
+    m = 32
+    dc = jnp.ones((m,))
+    nyq = jnp.asarray((-1.0) ** np.arange(m), jnp.float32)
+    assert float(jnp.abs(hilbert.discrete_hilbert(dc)).max()) < 1e-6
+    assert float(jnp.abs(hilbert.discrete_hilbert(nyq)).max()) < 1e-5
+
+
+def test_hilbert_involution_up_to_dc_nyquist():
+    """H(H(u)) = -u on the subspace orthogonal to DC and Nyquist."""
+    m = 64
+    u = jax.random.normal(jax.random.PRNGKey(0), (2, m))
+    # project out DC and Nyquist components
+    nyq = jnp.asarray((-1.0) ** np.arange(m), jnp.float32)
+    u = u - u.mean(axis=-1, keepdims=True)
+    u = u - (u @ nyq)[:, None] * nyq / m
+    hh = hilbert.discrete_hilbert(hilbert.discrete_hilbert(u))
+    assert _rel_max(hh, -u) <= 1e-4
+
+
+# ------------------------------------------------- exact causality layer
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [2, 5, 8, 33, 64, 127])    # odd and even n
+def test_causal_spectrum_exactly_causal(n, dtype):
+    """irfft(causal_spectrum(u)) must vanish on lags n+1..2n-1 (the
+    analytic-signal window zeroes negative lags exactly, not to FFT
+    leakage level)."""
+    khat = jax.random.normal(jax.random.PRNGKey(n), (2, n + 1)).astype(dtype)
+    spec = hilbert.causal_spectrum(khat)
+    k_time = np.asarray(jnp.fft.irfft(spec, n=2 * n, axis=-1))
+    scale = max(float(np.abs(k_time).max()), 1.0)
+    assert np.abs(k_time[:, n + 1:]).max() <= 1e-5 * scale
+
+
+@pytest.mark.parametrize("n", [5, 8, 64])
+def test_causal_spectrum_matches_literal_hilbert_form(n):
+    """The windowed two-FFT construction == the paper-literal
+    khat - i·H{khat} over the even-symmetric extension."""
+    khat = jax.random.normal(jax.random.PRNGKey(n), (3, n + 1))
+    a = np.asarray(hilbert.causal_spectrum(khat))
+    b = np.asarray(hilbert.causal_spectrum_via_hilbert(khat))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------ hypothesis property layer
+@needs_hypothesis
+@_settings
+@given(st.integers(2, 96), st.integers(0, 2 ** 16))
+def test_prop_hilbert_fft_matches_conv_oracle(half_m, seed):
+    m = 2 * half_m                                       # even period
+    u = jax.random.normal(jax.random.PRNGKey(seed), (2, m))
+    got = hilbert.discrete_hilbert(u)
+    want = hilbert.discrete_hilbert_conv(u)
+    assert _rel_max(got, want) <= 1e-4
+
+
+@needs_hypothesis
+@_settings
+@given(st.integers(2, 128), st.integers(0, 2 ** 16),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_prop_causal_spectrum_always_causal(n, seed, dtype):
+    khat = jax.random.normal(jax.random.PRNGKey(seed), (2, n + 1)).astype(
+        jnp.dtype(dtype))
+    spec = hilbert.causal_spectrum(khat)
+    k_time = np.asarray(jnp.fft.irfft(spec, n=2 * n, axis=-1))
+    scale = max(float(np.abs(k_time).max()), 1.0)
+    assert np.abs(k_time[:, n + 1:]).max() <= 1e-5 * scale
+
+
+@needs_hypothesis
+@_settings
+@given(st.integers(2, 64), st.integers(0, 2 ** 16))
+def test_prop_hilbert_is_linear(half_m, seed):
+    m = 2 * half_m
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    u = jax.random.normal(k1, (m,))
+    v = jax.random.normal(k2, (m,))
+    lhs = hilbert.discrete_hilbert(3.0 * u - 2.0 * v)
+    rhs = 3.0 * hilbert.discrete_hilbert(u) - 2.0 * hilbert.discrete_hilbert(v)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)

