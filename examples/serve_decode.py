@@ -1,11 +1,19 @@
 """Batched serving example: prefill + autoregressive decode with per-layer
-caches (attention KV / SSD state / TNO history), through the same
-serve_step the multi-pod dry-run compiles.
+caches (attention KV / SSD state / TNO history / FD overlap-save stream),
+through the same serve_step the multi-pod dry-run compiles.
+
+FD archs decode through the streaming cache by default (ring of the last
+C tokens + precomputed kernel-tail contributions, O(d) per token — see
+kernels/fd_stream.py) with the prompt entering in C-token blocks
+(chunked prefill). ``--stream off`` pins the legacy O(n·d) hist-replay
+decode for A/B comparison.
 
   PYTHONPATH=src python examples/serve_decode.py --arch fd-tnn-lm-wt103
+  PYTHONPATH=src python examples/serve_decode.py --arch fd-tnn-lm-wt103 --stream off
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
 """
 import argparse
+import os
 import time
 
 import jax
@@ -13,11 +21,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import generate
-from repro.launch.steps import StepBuilder
-from repro.models.transformer import init_model
-from repro.nn.params import unbox
 
 
 def main():
@@ -27,8 +30,23 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--stream", choices=["auto", "off"], default="auto",
+                    help="off: force the legacy hist-replay TNO/FD cache")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="token-by-token prefill even for streaming archs")
     args = ap.parse_args()
 
+    if args.stream == "off":
+        os.environ["REPRO_FD_STREAM"] = "0"
+    # env must be set before the serving/backend modules are imported
+    from repro.kernels import backend
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import generate
+    from repro.launch.steps import StepBuilder
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+
+    print(f"[serve] backend: {backend.describe()}")
     cfg = reduce_for_smoke(get_config(args.arch))
     mesh = make_host_mesh()
     sb = StepBuilder(cfg, mesh)
@@ -40,7 +58,9 @@ def main():
             jnp.int32)
         t0 = time.time()
         toks = generate(sb, params, prompt, args.gen_len,
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        chunked_prefill=False if args.no_chunked_prefill
+                        else None)
         toks.block_until_ready()
         dt = time.time() - t0
     n_new = args.batch * args.gen_len

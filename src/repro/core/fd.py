@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.hilbert import causal_spectrum
 from repro.core.rpe import MLPRPEConfig, mlp_rpe_apply, mlp_rpe_init
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +40,7 @@ class FDConfig:
     # function so the activation's decay class actually binds (DESIGN
     # par.7; tested in test_paper_core).
     feature: str = "linear"
+    use_pallas: bool | None = None   # causal path backend (ops.fd_tno)
 
 
 def _rpe_cfg(cfg: FDConfig) -> MLPRPEConfig:
@@ -73,6 +75,19 @@ def _omega_grid(n: int, feature: str) -> jax.Array:
     return jnp.asarray(_omega_grid_host(n, feature))
 
 
+def kernel_spectrum_real(params, cfg: FDConfig, n: int) -> jax.Array:
+    """(d, n+1) *raw* real frequency response on the rfft grid — the RPE
+    output before the Hilbert completion. Causal configs only: this is
+    the parameter-side input of the fused op ``ops.fd_tno``, which owns
+    the Hilbert step (so the causal-spectrum construction runs inside the
+    differentiable kernel pipeline, not in the plan)."""
+    if not cfg.causal:
+        raise ValueError("kernel_spectrum_real is causal-only; "
+                         "bidirectional models the complex response")
+    omega = _omega_grid(int(n), cfg.feature)
+    return mlp_rpe_apply(params["rpe"], _rpe_cfg(cfg), omega).T
+
+
 def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
     """Evaluate the (d, n+1) complex frequency response on the rfft grid.
 
@@ -80,11 +95,10 @@ def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
     sequences — in frequency, resolution scales with signal length, so
     length extrapolation is grid refinement, not model extrapolation.
     """
+    if cfg.causal:
+        return causal_spectrum(kernel_spectrum_real(params, cfg, n))
     omega = _omega_grid(int(n), cfg.feature)
     out = mlp_rpe_apply(params["rpe"], _rpe_cfg(cfg), omega)  # (n+1, width)
-    if cfg.causal:
-        khat_real = out.T                                     # (d, n+1)
-        return causal_spectrum(khat_real)
     re, im = out[:, : cfg.d].T, out[:, cfg.d:].T              # (d, n+1)
     # real-valued time kernel: imag must vanish at DC and Nyquist
     mask = jnp.ones((n + 1,), jnp.float32).at[0].set(0.0).at[n].set(0.0)
@@ -92,10 +106,22 @@ def kernel_spectrum(params, cfg: FDConfig, n: int) -> jax.Array:
 
 
 def fd_tno_apply(params, cfg: FDConfig, x: jax.Array,
-                 khat: jax.Array | None = None) -> jax.Array:
+                 khat: jax.Array | None = None,
+                 khat_real: jax.Array | None = None) -> jax.Array:
     """x: (b, n, d) -> (b, n, d) via one rfft/irfft pair on x only.
-    ``khat`` — optional precomputed :func:`kernel_spectrum` (tno_plan)."""
+
+    Causal configs route through the single differentiable op
+    ``ops.fd_tno`` (Hilbert completion + spectral multiply + FFT staging
+    — the Pallas path carries custom-VJP backward kernels,
+    kernels/fd_fused.py). ``khat_real`` — optional precomputed
+    :func:`kernel_spectrum_real` (tno_plan). Bidirectional configs (or an
+    explicitly supplied complex ``khat``) use the legacy jnp multiply.
+    """
     b, n, d = x.shape
+    if cfg.causal and khat is None:
+        if khat_real is None:
+            khat_real = kernel_spectrum_real(params, cfg, n)  # (d, n+1)
+        return ops.fd_tno(x, khat_real, use_pallas=cfg.use_pallas)
     if khat is None:
         khat = kernel_spectrum(params, cfg, n)                # (d, n+1)
     xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)  # (b,n+1,d)

@@ -45,10 +45,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import toeplitz
-from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply, interp_rpe_init,
-                            inverse_time_warp)
+from repro.core.rpe import (InterpRPEConfig, interp_rpe_apply,
+                            interp_rpe_init)
 from repro.kernels import backend, ops
 from repro.nn.params import KeyGen, boxed
 
@@ -65,31 +66,47 @@ class SKIConfig:
 
 
 @functools.lru_cache(maxsize=128)
-def make_inducing(n: int, r: int):
-    """Uniform inducing points on [0, n-1]; returns (idx_lo, w_lo, h).
-    Memoised: the geometry depends only on (n, r), so all layers of a model
-    (and every forward) share one copy instead of rebuilding it per block.
-    ``ensure_compile_time_eval`` keeps the cached values concrete even when
-    the first call happens inside a jit trace."""
-    with jax.ensure_compile_time_eval():
-        h = (n - 1) / (r - 1)
-        i = jnp.arange(n, dtype=jnp.float32)
-        f = i / h
-        lo = jnp.clip(jnp.floor(f).astype(jnp.int32), 0, r - 2)
-        # clamp: fp32 rounding of the irrational spacing h can push the
-        # boundary weight a few ulp outside [0, 1]
-        w_lo = jnp.clip(1.0 - (f - lo.astype(jnp.float32)), 0.0, 1.0)
+def _make_inducing_host(n: int, r: int):
+    """Host-numpy body of :func:`make_inducing`.
+
+    Cached as HOST numpy, not jax.Arrays: an lru_cache keyed only on
+    (n, r) that holds device buffers pins them to whatever backend was
+    active at first call — stale (or dead) buffers leak across
+    backend/device switches (the PR 3 fix of core/fd._omega_grid, applied
+    here too). Callers device_put via jnp.asarray, free under jit."""
+    h = (n - 1) / (r - 1)
+    f = np.arange(n, dtype=np.float32) / np.float32(h)
+    lo = np.clip(np.floor(f).astype(np.int32), 0, r - 2)
+    # clamp: fp32 rounding of the irrational spacing h can push the
+    # boundary weight a few ulp outside [0, 1]
+    w_lo = np.clip((1.0 - (f - lo.astype(np.float32))).astype(np.float32),
+                   np.float32(0.0), np.float32(1.0))
     return lo, w_lo, h
 
 
+def make_inducing(n: int, r: int):
+    """Uniform inducing points on [0, n-1]; returns (idx_lo, w_lo, h).
+    Memoised (host-side): the geometry depends only on (n, r), so all
+    layers of a model (and every forward) share one copy instead of
+    rebuilding it per block."""
+    lo, w_lo, h = _make_inducing_host(int(n), int(r))
+    return jnp.asarray(lo), jnp.asarray(w_lo), h
+
+
 @functools.lru_cache(maxsize=128)
-def _warped_lag_grid(r: int, h: float, lam: float):
-    """Warped inducing lags x(t) = sign(t) λ^|t| at lags -(r-1)h..(r-1)h —
-    param-independent, shared across layers/forwards (memoised; concrete
-    even when first built under a jit trace)."""
-    with jax.ensure_compile_time_eval():
-        lag = jnp.arange(-(r - 1), r, dtype=jnp.float32) * h
-        return inverse_time_warp(lag, lam)
+def _warped_lag_grid_host(r: int, h: float, lam: float) -> np.ndarray:
+    """Host-numpy warped lags x(t) = sign(t) λ^|t| at lags -(r-1)h..(r-1)h
+    — param-independent, shared across layers/forwards. Same host-cache
+    policy as :func:`_make_inducing_host` (no pinned device buffers)."""
+    lag = np.arange(-(r - 1), r, dtype=np.float32) * np.float32(h)
+    return (np.sign(lag) *
+            np.power(np.float32(lam), np.abs(lag))).astype(np.float32)
+
+
+def _warped_lag_grid(r: int, h: float, lam: float) -> jax.Array:
+    """Device view of the cached host grid (matches
+    rpe.inverse_time_warp on the same lags)."""
+    return jnp.asarray(_warped_lag_grid_host(int(r), float(h), float(lam)))
 
 
 def ski_init(key, cfg: SKIConfig):

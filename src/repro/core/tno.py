@@ -45,7 +45,8 @@ class TNOConfig:
 
     def fd_cfg(self) -> fd.FDConfig:
         return fd.FDConfig(self.d, self.causal, self.rpe_hidden,
-                           self.rpe_layers, self.rpe_act)
+                           self.rpe_layers, self.rpe_act,
+                           use_pallas=self.use_pallas)
 
     def ski_cfg(self) -> ski.SKIConfig:
         return ski.SKIConfig(self.d, self.rank, self.filter_size, self.lam,
@@ -85,7 +86,13 @@ def tno_plan(params, cfg: TNOConfig, n: int) -> dict:
     spectrum evaluation is not repeated per op — serving reuses it across
     decode steps of equal n."""
     if cfg.variant == "fd":
-        return {"khat": fd.kernel_spectrum(params, cfg.fd_cfg(), n)}
+        fcfg = cfg.fd_cfg()
+        if fcfg.causal:
+            # raw real response: the Hilbert completion happens inside the
+            # fused op (ops.fd_tno), so grads flow through it on the
+            # kernel path rather than through plan precomputation
+            return {"khat_real": fd.kernel_spectrum_real(params, fcfg, n)}
+        return {"khat": fd.kernel_spectrum(params, fcfg, n)}
     if cfg.variant == "ski":
         return ski.ski_plan(params, cfg.ski_cfg(), n, causal=cfg.causal)
     return {"coef": baseline_coeffs(params, cfg, n)}
@@ -97,7 +104,9 @@ def tno_apply(params, cfg: TNOConfig, x: jax.Array,
     :func:`tno_plan` for the same (params, cfg, n)."""
     if cfg.variant == "fd":
         return fd.fd_tno_apply(params, cfg.fd_cfg(), x,
-                               khat=plan["khat"] if plan else None)
+                               khat=plan.get("khat") if plan else None,
+                               khat_real=plan.get("khat_real") if plan
+                               else None)
     if cfg.variant == "ski":
         return ski.ski_tno_apply(params, cfg.ski_cfg(), x, causal=cfg.causal,
                                  plan=plan)

@@ -84,6 +84,8 @@ _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 _ENV_DENSE_RMAX = "REPRO_SKI_DENSE_RMAX"
 _ENV_WINDOWED_RMAX = "REPRO_SKI_WINDOWED_RMAX"
 _ENV_BAND_MAX = "REPRO_SKI_BAND_MAX"
+_ENV_FD_STREAM = "REPRO_FD_STREAM"
+_ENV_FD_STREAM_C = "REPRO_FD_STREAM_C"
 
 _FORCED_DEFAULT: bool | None = None     # set_default_use_pallas override
 _FORCED_GRAD: bool | None = None        # set_default_pallas_grad override
@@ -164,7 +166,39 @@ def describe() -> str:
             f"pallas_grad={resolve_pallas_grad()} "
             f"ski_variant=(dense<={ski_dense_rank_max()}"
             f"<windowed<={ski_windowed_rank_max()}<fft"
-            f"|band<={band_budget()})")
+            f"|band<={band_budget()}) "
+            f"fd_stream={fd_stream_enabled()}(C={fd_stream_block()})")
+
+
+# ------------------------------------------------- FD streaming decode
+def fd_stream_enabled() -> bool:
+    """Serving policy: replace the O(n·d)-per-token hist-replay decode of
+    ``fd`` mixers with the overlap-save streaming cache
+    (kernels/fd_stream.py). "auto" (default) enables it whenever the
+    cache can be built (params available at init); ``REPRO_FD_STREAM=0``
+    pins the legacy hist-replay cache (debug / A-B comparison)."""
+    v = os.environ.get(_ENV_FD_STREAM, "auto").lower()
+    if v in ("1", "true", "on"):
+        return True
+    if v in ("0", "false", "off"):
+        return False
+    if v in ("auto", ""):
+        return True
+    # a typo'd knob must not silently serve through a different decode
+    # path than the user believes (the describe() banner principle)
+    raise ValueError(f"{_ENV_FD_STREAM}={v!r} is not one of "
+                     "auto/1/0/true/false/on/off")
+
+
+def fd_stream_block() -> int:
+    """Overlap-save block size C: the ring holds the last C tokens, block
+    spectra are length-2C rffts, and the kernel-tail refresh runs every C
+    steps. Larger C amortises the refresh further but grows the direct
+    head work (O(C·d) per token) and the refresh latency spike."""
+    c = _env_int(_ENV_FD_STREAM_C, 64)
+    if c < 2:
+        raise ValueError(f"{_ENV_FD_STREAM_C}={c} must be >= 2")
+    return c
 
 
 # ------------------------------------------------- large-rank SKI policy
@@ -270,6 +304,12 @@ _DEFAULT_TARGETS = {
     "ski_windowed": (256, 128),
     "ski_expand2": (256, 128),
     "conv_tap_grad": (256, 128),
+    # causal FD-TNO pipeline (kernels/fd_fused.py): freq-tile × d-tile for
+    # the spectral multiply / khat reduction, d-tile × lag-tile for the
+    # Hilbert lag window
+    "fd_mul": (256, 128),
+    "fd_khat_grad": (256, 128),
+    "hilbert_window": (128, 512),
 }
 
 _cache_lock = threading.Lock()

@@ -1,0 +1,350 @@
+"""Fused causal FD-TNO Pallas pipeline (paper §3.3, Algorithm 2).
+
+The causal frequency-domain TNO models only the *real* part ``khat`` of the
+kernel's frequency response on the rfft grid and recovers the imaginary
+part with a discrete Hilbert transform (``khat - i·H{khat}``, realised as
+the analytic-signal window in the lag variable — the numerically-exact
+form pinned by tests/test_hilbert.py). The jnp path in core/fd.py runs
+this as five separate XLA ops with the (b, n+1, d) complex spectrum
+crossing HBM between each. This module is the FD sibling of the fused SKI
+stack (kernels/ski_fused.py + ski_vjp.py): the (i)rfft stages remain XLA
+FFTs (Pallas has no FFT primitive; the FFTs are the only super-linear
+work), and everything *between* them is fused into blocked Pallas kernels:
+
+* ``hilbert_window_pallas`` — the analytic-signal lag window (1, 2, …, 2,
+  1, 0, …, 0) applied to the kernel's time response, blocked over
+  (d-tile, lag-tile), the window regenerated in-kernel from iota. The
+  window is diagonal ⇒ self-adjoint: its custom VJP is the same kernel.
+* ``fd_spectral_multiply_pallas`` — the per-channel complex spectral
+  multiply ŷ = x̂ ⊙ k̂ on re/im planes (Pallas TPU has no complex dtype),
+  blocked over (batch, freq-tile, d-tile): both output planes produced by
+  one kernel / one read of x̂ — the (b, n+1, d) round-trips between
+  ``real·real``/``imag·imag`` element-wise ops collapse into one pass.
+* ``fd_khat_grad_pallas`` — the backward's per-tile reduction kernel:
+  Σ_b ĝ ⊙ conj(x̂) accumulated over the innermost batch grid axis
+  (consecutive output revisits — the safe Pallas accumulation pattern,
+  same as ski_grad).
+
+The differentiable op is :func:`fd_tno_pallas` (dispatched by
+``ops.fd_tno``): a ``jax.custom_vjp`` whose backward *reuses the forward
+multiply kernel with the spectrum conjugated* — the adjoint of a causal
+circular convolution is the anticausal correlation, i.e. the identical
+pipeline with k̂ → conj(k̂) — plus the reduction kernel for the k̂
+cotangent. All cotangents are exact linear-operator adjoints (circular
+correlation theorem), not FFT-adjoint approximations:
+
+    y   = slice_n( irfft( rfft(pad x) ⊙ k̂ ) )       k̂ = rfft(w ⊙ irfft(khat))
+    dx  = slice_n( irfft( rfft(pad g) ⊙ conj k̂ ) )   forward kernel, conj spectrum
+    dk̂_time = irfft( Σ_b rfft(pad g) ⊙ conj(rfft(pad x)) )   reduction kernel
+    dkhat   = irfftᵀ( w ⊙ dk̂_time )                 window kernel again (wᵀ = w)
+
+Residual policy matches the SKI ops: inputs only (x, khat_real); the
+spectra are recomputed in the backward. ``REPRO_PALLAS_GRAD=0`` swaps the
+backward to the jnp reference cotangents (counters record which path ran —
+no silent fallback, the ski_vjp contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import backend
+
+# trace-time instrumentation, same contract as kernels/ski_vjp.py: tests
+# (and the trainer banner) assert training never silently falls back to
+# the jnp reference path
+counters = {"fwd": 0, "bwd_kernel": 0, "bwd_ref": 0}
+
+
+def reset_counters() -> None:
+    for k in counters:
+        counters[k] = 0
+
+
+# ------------------------------------------------------ hilbert lag window
+def _window_kernel(k_ref, o_ref, *, n, bt):
+    ti = pl.program_id(1)
+    t = jax.lax.broadcasted_iota(jnp.int32, k_ref.shape, 1) + ti * bt
+    w = jnp.where((t == 0) | (t == n), 1.0,
+                  jnp.where(t < n, 2.0, 0.0))
+    o_ref[...] = (k_ref[...].astype(jnp.float32) * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret", "bd", "bt"))
+def _window_call(kt, n: int, *, interpret, bd, bt):
+    d, tt = kt.shape
+    grid = (d // bd, tt // bt)
+    return pl.pallas_call(
+        functools.partial(_window_kernel, n=n, bt=bt),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bd, bt), lambda di, ti: (di, ti))],
+        out_specs=pl.BlockSpec((bd, bt), lambda di, ti: (di, ti)),
+        out_shape=jax.ShapeDtypeStruct((d, tt), kt.dtype),
+        interpret=interpret,
+    )(kt)
+
+
+def _window_padded(kt, n, interpret, bd, bt):
+    d, tt = kt.shape
+    dp, tp = backend.round_up(d, bd), backend.round_up(tt, bt)
+    if dp != d or tp != tt:
+        out = _window_call(jnp.pad(kt, ((0, dp - d), (0, tp - tt))), n,
+                           interpret=interpret, bd=bd, bt=bt)
+        return out[:d, :tt]
+    return _window_call(kt, n, interpret=interpret, bd=bd, bt=bt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _window_core(kt, n, interpret, bd, bt):
+    return _window_padded(kt, n, interpret, bd, bt)
+
+
+def _window_core_fwd(kt, n, interpret, bd, bt):
+    return _window_core(kt, n, interpret, bd, bt), None
+
+
+def _window_core_bwd(n, interpret, bd, bt, res, g):
+    del res                                   # diagonal window: residual-free
+    if not backend.resolve_pallas_grad():
+        from repro.kernels import ref
+        return (ref.hilbert_window_ref(g, n),)
+    return (_window_padded(g, n, interpret, bd, bt),)
+
+
+_window_core.defvjp(_window_core_fwd, _window_core_bwd)
+
+
+def hilbert_window_pallas(kt, n: int, *, interpret=None, bd=None, bt=None):
+    """Analytic-signal lag window of :func:`repro.core.hilbert.causal_spectrum`:
+    keep lag 0 and lag n, double lags 1..n-1, zero lags n+1..  (causal ⇒
+    the irfft of the windowed response vanishes on negative lags exactly).
+
+    kt: (d, 2n) time response (``irfft(khat_real)``). The window is
+    diagonal, hence self-adjoint — differentiable via a custom VJP that is
+    this same kernel. Matches ref.hilbert_window_ref.
+    """
+    d, tt = kt.shape
+    interpret = backend.resolve_interpret(interpret)
+    if bd is None or bt is None:
+        tune = None
+        if backend.is_concrete(kt):
+            tune = lambda BD, BT: _window_padded(kt, n, interpret, BD, BT)
+        # get_blocks keys on (sublane-dim, lane-dim): here (d, lag)
+        hbd, hbt = backend.get_blocks("hilbert_window", d, tt, kt.dtype,
+                                      interpret,
+                                      tune_call=tune, extra=f"n={n}")
+        bd = bd or hbd
+        bt = bt or hbt
+    bd, bt = backend.clamp_blocks(bd, bt, d, tt, interpret)
+    return _window_core(kt, int(n), interpret, bd, bt)
+
+
+# ------------------------------------------------- complex spectral multiply
+def _mul_kernel(xr_ref, xi_ref, kr_ref, ki_ref, yr_ref, yi_ref):
+    xr = xr_ref[0].astype(jnp.float32)
+    xi = xi_ref[0].astype(jnp.float32)
+    kr = kr_ref[...].astype(jnp.float32)
+    ki = ki_ref[...].astype(jnp.float32)
+    yr_ref[0] = (xr * kr - xi * ki).astype(yr_ref.dtype)
+    yi_ref[0] = (xr * ki + xi * kr).astype(yi_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bf", "bd"))
+def _mul_call(xr, xi, kr, ki, *, interpret, bf, bd):
+    b, f, d = xr.shape
+    grid = (b, d // bd, f // bf)
+    xspec = pl.BlockSpec((1, bf, bd), lambda bi, di, fi: (bi, fi, di))
+    kspec = pl.BlockSpec((bf, bd), lambda bi, di, fi: (fi, di))
+    out = jax.ShapeDtypeStruct((b, f, d), jnp.float32)
+    return pl.pallas_call(
+        _mul_kernel,
+        grid=grid,
+        in_specs=[xspec, xspec, kspec, kspec],
+        out_specs=[pl.BlockSpec((1, bf, bd), lambda bi, di, fi: (bi, fi, di))] * 2,
+        out_shape=[out, out],
+        interpret=interpret,
+    )(xr, xi, kr, ki)
+
+
+def _mul_padded(xr, xi, kr, ki, interpret, bf, bd):
+    b, f, d = xr.shape
+    fp, dp = backend.round_up(f, bf), backend.round_up(d, bd)
+    if fp != f or dp != d:
+        padx = ((0, 0), (0, fp - f), (0, dp - d))
+        padk = ((0, fp - f), (0, dp - d))
+        yr, yi = _mul_call(jnp.pad(xr, padx), jnp.pad(xi, padx),
+                           jnp.pad(kr, padk), jnp.pad(ki, padk),
+                           interpret=interpret, bf=bf, bd=bd)
+        return yr[:, :f, :d], yi[:, :f, :d]
+    return _mul_call(xr, xi, kr, ki, interpret=interpret, bf=bf, bd=bd)
+
+
+def fd_spectral_multiply_pallas(xr, xi, kr, ki, *, interpret=None, bf=None,
+                                bd=None):
+    """Per-channel complex spectral multiply on re/im planes, one kernel.
+
+    xr, xi: (b, F, d) signal-spectrum planes (F = n+1 rfft bins);
+    kr, ki: (F, d) kernel-spectrum planes. Returns (yr, yi), fp32.
+    Matches ref.fd_spectral_multiply_ref. The backward sibling is this
+    same kernel with the kernel spectrum conjugated (ki → -ki) — see
+    :func:`fd_tno_pallas`.
+    """
+    b, f, d = xr.shape
+    interpret = backend.resolve_interpret(interpret)
+    if bf is None or bd is None:
+        tune = None
+        if backend.is_concrete(xr, xi, kr, ki):
+            tune = lambda BF, BD: _mul_padded(xr, xi, kr, ki, interpret,
+                                              BF, BD)
+        hbf, hbd = backend.get_blocks("fd_mul", f, d, xr.dtype, interpret,
+                                      tune_call=tune)
+        bf = bf or hbf
+        bd = bd or hbd
+    bf, bd = backend.clamp_blocks(bf, bd, f, d, interpret)
+    return _mul_padded(xr, xi, kr, ki, interpret, bf, bd)
+
+
+# --------------------------------------------------- khat cotangent reduce
+def _khat_grad_kernel(gr_ref, gi_ref, xr_ref, xi_ref, dr_ref, di_ref):
+    bi = pl.program_id(2)
+    gr = gr_ref[0].astype(jnp.float32)
+    gi = gi_ref[0].astype(jnp.float32)
+    xr = xr_ref[0].astype(jnp.float32)
+    xi = xi_ref[0].astype(jnp.float32)
+    pr = gr * xr + gi * xi                    # Re(ĝ conj(x̂))
+    pi = gi * xr - gr * xi                    # Im(ĝ conj(x̂))
+
+    @pl.when(bi == 0)
+    def _init():
+        dr_ref[...] = pr
+        di_ref[...] = pi
+
+    @pl.when(bi > 0)
+    def _acc():
+        dr_ref[...] = dr_ref[...] + pr
+        di_ref[...] = di_ref[...] + pi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bf", "bd"))
+def _khat_grad_call(gr, gi, xr, xi, *, interpret, bf, bd):
+    b, f, d = xr.shape
+    grid = (d // bd, f // bf, b)              # batch innermost: consecutive
+    xspec = pl.BlockSpec((1, bf, bd), lambda di, fi, bi: (bi, fi, di))
+    ospec = pl.BlockSpec((bf, bd), lambda di, fi, bi: (fi, di))
+    out = jax.ShapeDtypeStruct((f, d), jnp.float32)
+    return pl.pallas_call(
+        _khat_grad_kernel,
+        grid=grid,
+        in_specs=[xspec] * 4,
+        out_specs=[ospec] * 2,
+        out_shape=[out, out],
+        interpret=interpret,
+    )(gr, gi, xr, xi)
+
+
+def fd_khat_grad_pallas(gr, gi, xr, xi, *, interpret=None, bf=None, bd=None):
+    """Per-tile batch-reduction of the kernel-spectrum cotangent:
+    (dkr, dki) = planes of Σ_b ĝ ⊙ conj(x̂) → (F, d) fp32 each.
+
+    The irfft of this is *exactly* the time-domain cotangent of the causal
+    kernel (circular correlation theorem) — no FFT-adjoint scaling enters.
+    Matches ref.fd_khat_grad_ref.
+    """
+    b, f, d = xr.shape
+    interpret = backend.resolve_interpret(interpret)
+    if bf is None or bd is None:
+        bf, bd = backend.get_blocks("fd_khat_grad", f, d, xr.dtype, interpret)
+    bf, bd = backend.clamp_blocks(bf, bd, f, d, interpret)
+    fp, dp = backend.round_up(f, bf), backend.round_up(d, bd)
+    if fp != f or dp != d:
+        pad = ((0, 0), (0, fp - f), (0, dp - d))
+        dr, di = _khat_grad_call(jnp.pad(gr, pad), jnp.pad(gi, pad),
+                                 jnp.pad(xr, pad), jnp.pad(xi, pad),
+                                 interpret=interpret, bf=bf, bd=bd)
+        return dr[:f, :d], di[:f, :d]
+    return _khat_grad_call(gr, gi, xr, xi, interpret=interpret, bf=bf, bd=bd)
+
+
+# --------------------------------------------------------- the fused op
+def causal_khat_planes(khat_real, interpret=None):
+    """(d, n+1) real response → ((n+1), d) re/im planes of the causal
+    spectrum ``khat - i·H{khat}``, the Hilbert step realised as the
+    analytic lag window (Pallas) between the two staging FFTs.
+
+    Differentiable: the window kernel carries its own custom VJP and the
+    FFT stages use XLA's exact adjoints, so ``jax.vjp`` through this is
+    exact (used by the op backward for the parameter-side pullback).
+    """
+    n = khat_real.shape[-1] - 1
+    kt = jnp.fft.irfft(khat_real.astype(jnp.float32), n=2 * n, axis=-1)
+    kc = hilbert_window_pallas(kt, n, interpret=interpret)
+    khat = jnp.fft.rfft(kc, n=2 * n, axis=-1)                # (d, n+1)
+    return jnp.real(khat).T, jnp.imag(khat).T                # (n+1, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fd_tno_pallas(x, khat_real, interpret: bool):
+    """Causal FD-TNO as one differentiable op: y = irfft(rfft(x) ⊙ k̂)[:n]
+    with k̂ the Hilbert-completed causal spectrum of ``khat_real``.
+
+    x: (b, n, d); khat_real: (d, n+1) real response on the rfft grid
+    (the raw RPE output — no decay bias, paper §3.3). Matches
+    ref.fd_tno_ref. ``interpret`` must be resolved by the caller (static
+    nondiff argument).
+    """
+    b, n, d = x.shape
+    kr, ki = causal_khat_planes(khat_real, interpret)
+    xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)  # (b,n+1,d)
+    yr, yi = fd_spectral_multiply_pallas(jnp.real(xhat), jnp.imag(xhat),
+                                         kr, ki, interpret=interpret)
+    y = jnp.fft.irfft(yr + 1j * yi, n=2 * n, axis=1)[:, :n]
+    return y.astype(x.dtype)
+
+
+def _fd_fwd(x, khat_real, interpret):
+    counters["fwd"] += 1
+    return fd_tno_pallas(x, khat_real, interpret), (x, khat_real)
+
+
+def _fd_bwd_ref_formulas(x, khat_real, g):
+    from repro.kernels import ref
+    _, vjp = jax.vjp(ref.fd_tno_ref, x, khat_real)
+    return vjp(g)
+
+
+def _fd_bwd(interpret, res, g):
+    x, khat_real = res
+    if not backend.resolve_pallas_grad():
+        counters["bwd_ref"] += 1
+        return _fd_bwd_ref_formulas(x, khat_real, g)
+    counters["bwd_kernel"] += 1
+    b, n, d = x.shape
+    # recompute both spectra from the saved inputs (residuals = inputs only)
+    kr, ki = causal_khat_planes(khat_real, interpret)
+    xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)
+    ghat = jnp.fft.rfft(g.astype(jnp.float32), n=2 * n, axis=1)
+    gr, gi = jnp.real(ghat), jnp.imag(ghat)
+    # signal cotangent: the forward multiply kernel with the spectrum
+    # conjugated — adjoint of causal conv = anticausal correlation
+    dxr, dxi = fd_spectral_multiply_pallas(gr, gi, kr, -ki,
+                                           interpret=interpret)
+    dx = jnp.fft.irfft(dxr + 1j * dxi, n=2 * n, axis=1)[:, :n]
+    # kernel cotangent: per-tile reduction Σ_b ĝ ⊙ conj(x̂); its irfft is
+    # exactly the time cotangent of the causal kernel, then the (self-
+    # adjoint) lag window and the exact irfft adjoint pull it back to
+    # khat_real
+    dkr, dki = fd_khat_grad_pallas(gr, gi, jnp.real(xhat), jnp.imag(xhat),
+                                   interpret=interpret)
+    dkc = jnp.fft.irfft((dkr + 1j * dki).T, n=2 * n, axis=-1)    # (d, 2n)
+    dkt = hilbert_window_pallas(dkc, n, interpret=interpret)
+    _, irfft_vjp = jax.vjp(
+        lambda k: jnp.fft.irfft(k.astype(jnp.float32), n=2 * n, axis=-1),
+        khat_real)
+    (dkhat_real,) = irfft_vjp(dkt)
+    return dx.astype(x.dtype), dkhat_real.astype(khat_real.dtype)
+
+
+fd_tno_pallas.defvjp(_fd_fwd, _fd_bwd)

@@ -1,0 +1,193 @@
+"""Streaming overlap-save decode for causal TNO/FD mixers.
+
+Hist-replay decode (models/serving.py, PR 0-3) answers every token by
+re-running the full Toeplitz action against the whole input history:
+O(n·d) multiply-adds per token, O(n²·d) per sequence — exactly the
+deployment gap "Accelerating Toeplitz Neural Network with Constant-time
+Inference Complexity" (Qin & Zhong, 2023) identifies. This module replaces
+the ``{"hist": (b, n, d)}`` cache with an **overlap-save block scheme**:
+
+* a **ring buffer** of the last C tokens — the causal contribution of the
+  current (partial) block is a masked (d, C) head matmul, O(C·d) = O(d)
+  per token for fixed C;
+* **precomputed kernel-tail contributions**: when a block of C tokens
+  retires (every C steps), one length-2C rfft turns it into a cached
+  block spectrum, and the tail contributions of *all* retired blocks to
+  the next C positions are refreshed by summing cached block spectra
+  against precomputed kernel-segment spectra and one length-2C irfft —
+  O(d log C) FFT work amortised per token plus an O(n·d/C) spectral
+  accumulation per boundary (vs O(n·d) *every token* for hist-replay).
+
+Exactness: the kernel segment for a block of age m covers lags
+(m-1)C+1 .. (m+1)C-1; a length-2C circular convolution of the C-sample
+block with that segment is wraparound-free on the C output samples used
+(both factors fit in 2C), so the decode is the *exact* causal Toeplitz
+action — streaming output ≡ hist-replay output to fp accumulation order.
+
+``stream_push_block`` feeds C tokens at once through the same machinery
+(intra-block causal conv via the head spectrum + the identical boundary
+refresh), which is what chunked prefill is: the prompt enters block-wise
+at FFT speed instead of token-by-token (models/serving.decode_chunk).
+
+Everything here is jnp (decode shapes are tiny and latency-bound; the
+FFTs are the kernels). Policy knobs live in kernels/backend.py:
+``REPRO_FD_STREAM`` (enable), ``REPRO_FD_STREAM_C`` (block size C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_block_size(cache: dict) -> int:
+    """C of a streaming cache (static: ring is (b, C, d))."""
+    return cache["ring"].shape[1]
+
+
+def is_stream_cache(cache) -> bool:
+    return isinstance(cache, dict) and "ring" in cache
+
+
+def fd_stream_cache(k_causal: jax.Array, batch: int, max_len: int,
+                    C: int) -> dict:
+    """Build the overlap-save cache for one causal-TNO layer.
+
+    k_causal: (d, L) time-domain causal kernel, lags 0..L-1, L >= max_len
+    (``fd_kernel_time(...)[:, :max_len]`` for the FD mixer). All spectra
+    are fp32 re/im planes (complex leaves would break dtype-uniform cache
+    pytrees). Layout:
+
+    * ring (b, C, d) — slot i holds the token at position T+i of the
+      current block [T, T+C)
+    * tail (b, C, d) — tail[i] = Σ_{s < T} k[T+i-s]·u_s, precomputed
+    * uspec_re/im (b, NB, F, d) — rfft(2C) of each retired block (F=C+1)
+    * khead (d, C), khs_re/im (F, d), kseg_re/im (NB, F, d) — kernel
+      constants: head taps, head spectrum (chunked prefill), and the
+      per-age tail-segment spectra
+    """
+    d, ll = k_causal.shape
+    if ll < max_len:
+        raise ValueError(f"kernel covers {ll} lags < max_len={max_len}")
+    nb = -(-max_len // C)                                  # retired blocks
+    k = k_causal.astype(jnp.float32)
+    khead = k[:, :C]                                       # lags 0..C-1
+    khs = jnp.fft.rfft(khead, n=2 * C, axis=-1)            # (d, F)
+    # age-m segment: lags (m-1)C+1 .. (m+1)C-1 (2C-1 taps, zero past L)
+    kp = jnp.pad(k, ((0, 0), (0, (nb + 1) * C)))
+    segs = jnp.stack(
+        [jax.lax.dynamic_slice(kp, (0, (m - 1) * C + 1), (d, 2 * C - 1))
+         for m in range(1, nb + 1)], axis=0)               # (nb, d, 2C-1)
+    ks = jnp.fft.rfft(segs, n=2 * C, axis=-1)              # (nb, d, F)
+    f = C + 1
+    return {
+        "ring": jnp.zeros((batch, C, d), jnp.float32),
+        "tail": jnp.zeros((batch, C, d), jnp.float32),
+        "uspec_re": jnp.zeros((batch, nb, f, d), jnp.float32),
+        "uspec_im": jnp.zeros((batch, nb, f, d), jnp.float32),
+        "khead": khead,
+        "khs_re": jnp.real(khs).T, "khs_im": jnp.imag(khs).T,      # (F, d)
+        "kseg_re": jnp.swapaxes(jnp.real(ks), 1, 2),               # (nb,F,d)
+        "kseg_im": jnp.swapaxes(jnp.imag(ks), 1, 2),
+    }
+
+
+def _tail_from_specs(usr, usi, ksr_all, ksi_all, j):
+    """Tail contributions for the block after block j retires: sum the
+    cached block spectra against the kernel segment of their age
+    (block j' has age m = j+1-j' → segment index j-j'), one irfft."""
+    b, nb, f, d = usr.shape
+    two_c = 2 * (f - 1)
+    jp = jnp.arange(nb)
+    m_idx = j - jp
+    ksr = jnp.take(ksr_all, jnp.clip(m_idx, 0, nb - 1), axis=0)
+    ksi = jnp.take(ksi_all, jnp.clip(m_idx, 0, nb - 1), axis=0)
+    # blocks not yet retired (jp > j) hold zero spectra; the mask also
+    # guards the clipped (wrong-age) segment lookup for them
+    valid = (m_idx >= 0).astype(jnp.float32)[None, :, None, None]
+    accr = jnp.sum(valid * (usr * ksr[None] - usi * ksi[None]), axis=1)
+    acci = jnp.sum(valid * (usr * ksi[None] + usi * ksr[None]), axis=1)
+    full = jnp.fft.irfft(accr + 1j * acci, n=two_c, axis=1)  # (b, 2C, d)
+    c = f - 1
+    return full[:, c - 1:2 * c - 1, :]
+
+
+def _retire(ring, usr, usi, ksr, ksi, j):
+    """Cache the retiring block's spectrum (the one new length-2C rfft of
+    the boundary) and refresh the tail for the next block."""
+    u_spec = jnp.fft.rfft(ring.astype(jnp.float32), n=2 * ring.shape[1],
+                          axis=1)                          # (b, F, d)
+    usr = jax.lax.dynamic_update_slice(
+        usr, jnp.real(u_spec)[:, None], (0, j, 0, 0))
+    usi = jax.lax.dynamic_update_slice(
+        usi, jnp.imag(u_spec)[:, None], (0, j, 0, 0))
+    return _tail_from_specs(usr, usi, ksr, ksi, j), usr, usi
+
+
+def stream_step(cache: dict, u: jax.Array, t) -> tuple[jax.Array, dict]:
+    """One decode step: u (b, d) is the mixer input at position ``t``
+    (traced int32). Returns (y (b, d) fp32, new cache).
+
+    y_t = tail[t mod C] + Σ_{q=0..t mod C} khead[q]·u_{t-q}; when the
+    step completes a block, the boundary refresh runs under ``lax.cond``
+    so the O(n·d/C + d·C log C) work executes every C steps only.
+    """
+    ring, tail = cache["ring"], cache["tail"]
+    b, c, d = ring.shape
+    p = jnp.mod(t, c)
+    ring = jax.lax.dynamic_update_slice(
+        ring, u.astype(ring.dtype)[:, None, :], (0, p, 0))
+    # direct head: ring slot i holds position T+i → lag p-i, masked to the
+    # tokens of the current block seen so far
+    idx = jnp.arange(c)
+    tau = p - idx
+    kmat = jnp.where(tau >= 0,
+                     jnp.take(cache["khead"], jnp.clip(tau, 0, c - 1),
+                              axis=1), 0.0)                # (d, C)
+    y = jnp.einsum("bcd,dc->bd", ring.astype(jnp.float32), kmat)
+    y = y + jax.lax.dynamic_slice(tail, (0, p, 0), (b, 1, d))[:, 0]
+
+    j = t // c
+
+    def _boundary(args):
+        ring_, usr, usi = args
+        return _retire(ring_, usr, usi, cache["kseg_re"], cache["kseg_im"],
+                       j)
+
+    def _keep(args):
+        del args
+        return tail, cache["uspec_re"], cache["uspec_im"]
+
+    tail2, usr2, usi2 = jax.lax.cond(
+        jnp.mod(t + 1, c) == 0, _boundary, _keep,
+        (ring, cache["uspec_re"], cache["uspec_im"]))
+    new = dict(cache, ring=ring, tail=tail2, uspec_re=usr2, uspec_im=usi2)
+    return y, new
+
+
+def stream_push_block(cache: dict, u_block: jax.Array,
+                      t0) -> tuple[jax.Array, dict]:
+    """Chunked prefill: feed a FULL block of C tokens at positions
+    [t0, t0+C), t0 ≡ 0 (mod C). Returns (y (b, C, d) fp32, new cache).
+
+    The intra-block causal conv runs through the head spectrum (the
+    length-2C circular conv is wraparound-free on its first C samples),
+    reusing the rfft that retires the block — equivalent to C
+    :func:`stream_step` calls, at FFT speed.
+    """
+    b, c, d = cache["ring"].shape
+    uf = u_block.astype(jnp.float32)
+    u_spec = jnp.fft.rfft(uf, n=2 * c, axis=1)             # (b, F, d)
+    ur, ui = jnp.real(u_spec), jnp.imag(u_spec)
+    khr, khi = cache["khs_re"][None], cache["khs_im"][None]
+    yr = ur * khr - ui * khi
+    yi = ur * khi + ui * khr
+    y = jnp.fft.irfft(yr + 1j * yi, n=2 * c, axis=1)[:, :c] + cache["tail"]
+
+    j = t0 // c
+    usr = jax.lax.dynamic_update_slice(
+        cache["uspec_re"], ur[:, None], (0, j, 0, 0))
+    usi = jax.lax.dynamic_update_slice(
+        cache["uspec_im"], ui[:, None], (0, j, 0, 0))
+    tail = _tail_from_specs(usr, usi, cache["kseg_re"], cache["kseg_im"], j)
+    new = dict(cache, ring=uf, tail=tail, uspec_re=usr, uspec_im=usi)
+    return y, new

@@ -130,6 +130,29 @@ def ski_fused_tno_coef(x, a_coef, filt, idx_lo, w_lo, r: int, causal: bool,
                                       causal)
 
 
+def fd_tno(x, khat_real, *, use_pallas=None, interpret=None):
+    """Differentiable causal FD-TNO (paper §3.3, Algorithm 2): one op for
+    Hilbert-completed spectrum + per-channel spectral multiply + (i)rfft
+    staging.
+
+    x (b, n, d); khat_real (d, n+1) — the RPE's raw real frequency
+    response on the rfft grid (no decay bias). On the Pallas path the lag
+    window, the complex spectral multiply and the backward's khat
+    reduction are blocked Pallas kernels fused around the XLA FFT stages
+    (kernels/fd_fused.py), and the op carries a custom VJP whose signal
+    cotangent reuses the forward multiply kernel with the spectrum
+    conjugated (causal ⇄ anticausal) — so ``jax.grad`` of a causal FD
+    block stays on the kernel path, same contract as :func:`ski_fused_tno`
+    (counters in fd_fused assert no silent ref fallback). On the
+    reference path plain autodiff through ref.fd_tno_ref applies.
+    """
+    if backend.resolve_use_pallas(use_pallas):
+        from repro.kernels import fd_fused as k
+        return k.fd_tno_pallas(x, khat_real,
+                               backend.resolve_interpret(interpret))
+    return ref.fd_tno_ref(x, khat_real)
+
+
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
              interpret=None, hshard=None):
     """Mamba-2 SSD. See ref.ssd_scan_ref for shapes."""

@@ -247,6 +247,56 @@ def gram_coef_grad_ref(gz: jax.Array, z: jax.Array) -> jax.Array:
     return out.at[:, lag].add(da)
 
 
+# ------------------------------------------------------- causal FD-TNO
+def hilbert_window_ref(kt: jax.Array, n: int) -> jax.Array:
+    """Analytic-signal lag window (paper §3.3.1 Hilbert step in the lag
+    variable): keep lag 0 and lag n, double lags 1..n-1, zero the rest.
+    kt: (d, T) with T >= n+1 (normally T = 2n). Oracle for
+    kernels/fd_fused.hilbert_window_pallas; diagonal ⇒ self-adjoint."""
+    t = jnp.arange(kt.shape[-1])
+    w = jnp.where((t == 0) | (t == n), 1.0,
+                  jnp.where(t < n, 2.0, 0.0))
+    return (kt.astype(jnp.float32) * w[None]).astype(kt.dtype)
+
+
+def fd_spectral_multiply_ref(xr, xi, kr, ki):
+    """Complex spectral multiply on planes: ŷ = x̂ ⊙ k̂ per channel.
+    xr, xi: (b, F, d); kr, ki: (F, d). Oracle for
+    kernels/fd_fused.fd_spectral_multiply_pallas. fp32 outputs."""
+    xr = xr.astype(jnp.float32)
+    xi = xi.astype(jnp.float32)
+    kr = kr.astype(jnp.float32)[None]
+    ki = ki.astype(jnp.float32)[None]
+    return xr * kr - xi * ki, xr * ki + xi * kr
+
+
+def fd_khat_grad_ref(gr, gi, xr, xi):
+    """Kernel-spectrum cotangent planes: Σ_b ĝ ⊙ conj(x̂) → (F, d) each.
+    Oracle for kernels/fd_fused.fd_khat_grad_pallas. fp32 outputs."""
+    gr = gr.astype(jnp.float32)
+    gi = gi.astype(jnp.float32)
+    xr = xr.astype(jnp.float32)
+    xi = xi.astype(jnp.float32)
+    return (jnp.sum(gr * xr + gi * xi, axis=0),
+            jnp.sum(gi * xr - gr * xi, axis=0))
+
+
+def fd_tno_ref(x: jax.Array, khat_real: jax.Array) -> jax.Array:
+    """Causal FD-TNO oracle: y = irfft(rfft(x, 2n) ⊙ k̂, 2n)[:n] with
+    k̂ = causal_spectrum(khat_real) (the Hilbert-completed response).
+
+    x: (b, n, d); khat_real: (d, n+1). Semantics contract for
+    kernels/fd_fused.fd_tno_pallas; differentiable via plain autodiff
+    (pure jnp). Identical numerics to core.fd.fd_tno_apply on the causal
+    path."""
+    from repro.core.hilbert import causal_spectrum
+    b, n, d = x.shape
+    khat = causal_spectrum(khat_real.astype(jnp.float32))     # (d, n+1)
+    xhat = jnp.fft.rfft(x.astype(jnp.float32), n=2 * n, axis=1)
+    y = jnp.fft.irfft(xhat * khat.T[None], n=2 * n, axis=1)[:, :n]
+    return y.astype(x.dtype)
+
+
 # ------------------------------------------------------------- mamba2 SSD
 def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                  c: jax.Array, d_skip: jax.Array) -> jax.Array:

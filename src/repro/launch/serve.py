@@ -21,36 +21,63 @@ from repro.models import serving
 
 
 def generate(sb: StepBuilder, params, prompt, gen_len: int, *,
-             temperature: float = 0.0, seed: int = 0):
+             temperature: float = 0.0, seed: int = 0,
+             chunked_prefill: bool | None = None):
     """prompt: (b, p) int32. Greedy (or sampled) decode of gen_len tokens.
 
-    Prefill fills the caches by running decode steps over the prompt
-    (simple and correct for every mixer family; a chunked prefill path is
-    the serving-optimizing extension documented in DESIGN)."""
+    Prefill: FD-streaming archs consume the prompt in C-token blocks
+    through the overlap-save machinery (serving.decode_chunk — one rfft
+    per block instead of C sequential steps); any remainder, and every
+    other mixer family, is teacher-forced token-by-token. ``None`` (the
+    default) auto-detects; False forces token-by-token."""
     cfg = sb.cfg
     b, p = prompt.shape
     max_len = p + gen_len
-    cache = serving.init_cache(cfg, b, max_len)
+    cache = serving.init_cache(cfg, b, max_len, params=params)
     step = jax.jit(sb.make_serve_step())
 
     key = jax.random.PRNGKey(seed)
-    tok = prompt[:, :1]
     out = [prompt]
-    logits = None
-    for t in range(max_len - 1):
-        logits, cache = step(params, {"tokens": tok}, cache, jnp.int32(t))
-        if t + 1 < p:
-            tok = prompt[:, t + 1:t + 2]          # teacher-forced prefill
+
+    def pick(logits):
+        nonlocal key
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(
+                sub, logits[:, -1] / temperature, axis=-1)
         else:
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits[:, -1] / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)
-            nxt = jnp.minimum(nxt, cfg.vocab - 1).astype(jnp.int32)
-            tok = nxt[:, None]
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return jnp.minimum(nxt, cfg.vocab - 1).astype(jnp.int32)[:, None]
+
+    pos = 0
+    logits = None
+    supported = serving.supports_chunked_prefill(cfg, cache)
+    if chunked_prefill and not supported:
+        # an explicit True must not silently run the wrong machinery
+        # (non-streaming cache, or non-fd layers decode_chunk can't serve)
+        raise ValueError(
+            "chunked_prefill=True but the arch/cache does not support it "
+            f"(arch {cfg.name}: all mixers must be streaming fd layers)")
+    if chunked_prefill is None:
+        chunked_prefill = supported
+    if chunked_prefill:
+        c = serving.stream_block_of(cache)
+        chunk_step = jax.jit(sb.make_chunk_step())
+        while pos + c <= p:                       # whole prompt blocks
+            logits, cache = chunk_step(
+                params, {"tokens": prompt[:, pos:pos + c]}, cache,
+                jnp.int32(pos))
+            pos += c
+    while pos < max_len - 1:
+        if pos < p:
+            tok = prompt[:, pos:pos + 1]          # teacher-forced prefill
+        else:
+            tok = pick(logits)
             out.append(tok)
+        logits, cache = step(params, {"tokens": tok}, cache, jnp.int32(pos))
+        pos += 1
+    if gen_len > 0:
+        out.append(pick(logits))
     return jnp.concatenate(out, axis=1)
 
 

@@ -174,6 +174,18 @@ class StepBuilder:
             return serving.decode_step(params, cfg, ctx, batch, cache, cur_len)
         return serve_step
 
+    def make_chunk_step(self, shape: Optional[ShapeSpec] = None):
+        """C-token chunked-prefill step (FD streaming archs — see
+        serving.supports_chunked_prefill); same signature as serve_step
+        with (b, C) tokens."""
+        cfg = self.cfg
+        ctx = self.serve_ctx(shape)
+
+        def chunk_step(params, batch, cache, cur_len):
+            return serving.decode_chunk(params, cfg, ctx, batch, cache,
+                                        cur_len)
+        return chunk_step
+
     # ------------------------------------------------------- input specs
     def batch_sharding(self):
         data = (self.rules.data_axes if self.rules else ("data",))

@@ -1,0 +1,4 @@
+"""Model zoo: generic transformer assembly, mixer families (attention /
+mamba / TNO variants), MoE, and the serving (prefill + decode) layer.
+Real package (not a namespace dir) so coverage accounting and
+``python -m`` imports resolve it like every sibling."""

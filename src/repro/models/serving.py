@@ -7,6 +7,13 @@ over `model` (flash-decoding, DESIGN §5); mamba caches are O(1).
 
 TNO-mixer decode keeps the mixer-input history (the Toeplitz action needs
 it: y_t = Σ_τ k[τ] u_{t-τ}) — same O(n·d) as a KV cache but without heads.
+**FD mixers stream** (PR 4): when ``init_cache`` receives the params, the
+hist-replay cache is replaced by the overlap-save block cache of
+kernels/fd_stream.py — a ring of the last C tokens plus precomputed
+kernel-tail contributions refreshed every C steps, O(d) per-token work
+with O(d log C) amortised instead of O(n·d) replay. ``decode_chunk``
+feeds C tokens at once through the same block machinery, which is what
+chunked prefill is. ``REPRO_FD_STREAM=0`` pins the legacy hist cache.
 SKI decode is deliberately unsupported: the paper's Appendix B shows causal
 masking negates SKI's benefit; causal serving uses FD/TNO kernels.
 """
@@ -19,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import fd as fd_mod
 from repro.core import tno as tno_mod
+from repro.kernels import backend, fd_stream
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models.config import ArchConfig
@@ -30,33 +38,61 @@ from repro.nn.layers import ACTS, rmsnorm
 
 
 # ------------------------------------------------------------- cache init
-def _layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int, dtype):
+def _layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
+                 dtype, layer_params=None):
     if mixer in ("attention", "local"):
         return attn.decode_cache_init(cfg, batch, max_len, dtype)
     if mixer == "mamba":
         return mb.mamba_cache_init(cfg, batch, dtype)
+    if mixer == "fd" and layer_params is not None \
+            and backend.fd_stream_enabled():
+        # overlap-save streaming cache: needs the layer's causal kernel,
+        # hence the params (same kernel the hist path realises per step)
+        bcfg = _tno_cfg(cfg, mixer, causal=True)
+        kt = fd_mod.fd_kernel_time(layer_params["mixer"]["tno"],
+                                   bcfg.tno.fd_cfg(), max_len)
+        return fd_stream.fd_stream_cache(kt[:, :max_len], batch, max_len,
+                                         backend.fd_stream_block())
     if mixer in ("tno", "fd"):
         return {"hist": jnp.zeros((batch, max_len, cfg.d_model), dtype)}
     raise NotImplementedError(f"decode for mixer {mixer} (ski: Appendix B)")
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
+               params=None):
+    """Per-layer decode caches. ``params`` (optional) enables the
+    parameter-derived caches — currently the FD streaming cache; without
+    it (shape-only callers: dry-run input specs, eval_shape) every mixer
+    gets its parameter-free layout (fd falls back to hist-replay)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     spec = cfg.layers_spec
 
-    def block_cache():
-        return {f"sub{i}": _layer_cache(cfg, spec[i][0], batch, max_len, dtype)
+    def block_cache(block_params=None):
+        return {f"sub{i}": _layer_cache(
+                    cfg, spec[i][0], batch, max_len, dtype,
+                    None if block_params is None
+                    else block_params[f"sub{i}"])
                 for i in range(cfg.period)}
 
+    needs_params = (params is not None and backend.fd_stream_enabled()
+                    and any(m == "fd" for m, _ in spec))
     cache: Dict[str, Any] = {}
     if cfg.n_scan_blocks:
-        one = block_cache()
-        cache["blocks"] = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (cfg.n_scan_blocks,) + x.shape),
-            one)
+        if needs_params:
+            # per-layer kernels differ across scan blocks: vmap the cache
+            # builder over the stacked block params (parameter-free leaves
+            # broadcast, matching the legacy layout)
+            cache["blocks"] = jax.vmap(block_cache)(params["blocks"])
+        else:
+            one = block_cache()
+            cache["blocks"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_scan_blocks,) + x.shape),
+                one)
     for i in range(cfg.n_tail_layers):
         li = cfg.n_scan_blocks * cfg.period + i
-        cache[f"tail{i}"] = _layer_cache(cfg, spec[li][0], batch, max_len, dtype)
+        cache[f"tail{i}"] = _layer_cache(
+            cfg, spec[li][0], batch, max_len, dtype,
+            None if params is None else params.get(f"tail{i}"))
     return cache
 
 
@@ -78,12 +114,21 @@ def shard_cache(cfg: ArchConfig, ctx: Ctx, cache):
 # ------------------------------------------------------- tno decode mixer
 def _tno_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, x, cache,
                 cur_len):
-    """GTU decode: cache the TNO input stream u; y_t = Σ k[τ] u_{t-τ}."""
+    """GTU decode: cache the TNO input stream u; y_t = Σ k[τ] u_{t-τ}.
+
+    FD mixers with a streaming cache take the O(d)-per-token overlap-save
+    step (kernels/fd_stream.py) instead of replaying the history."""
     from repro.nn.layers import dense
     bcfg = _tno_cfg(cfg, mixer, causal=True)
     act = ACTS[bcfg.act]
     u = act(dense(params["wu"], x))                    # (b,1,d)
     v = act(dense(params["wv"], x))
+    if fd_stream.is_stream_cache(cache):
+        y, cache = fd_stream.stream_step(cache, u[:, 0, :], cur_len)
+        o = y[:, None, :].astype(x.dtype)
+        # GTU internals may run fp32 (transformer.mixer_apply casts the
+        # training path back too): keep the residual dtype stable
+        return dense(params["wo"], o * v).astype(x.dtype), cache
     hist = jax.lax.dynamic_update_slice_in_dim(
         cache["hist"], u.astype(cache["hist"].dtype), cur_len, axis=1)
     s = hist.shape[1]
@@ -100,7 +145,7 @@ def _tno_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, x, cache,
                                               axis=1), 0.0)  # (d, s)
     o = jnp.einsum("bsd,ds->bd", hist.astype(jnp.float32),
                    kmat.astype(jnp.float32))[:, None, :].astype(x.dtype)
-    return dense(params["wo"], o * v), {"hist": hist}
+    return dense(params["wo"], o * v).astype(x.dtype), {"hist": hist}
 
 
 # ------------------------------------------------------------- layer step
@@ -162,6 +207,78 @@ def decode_step(params, cfg: ArchConfig, ctx: Ctx, batch, cache, cur_len):
             cur_len, enc_out)
     x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
     new_cache = shard_cache(cfg, ctx, new_cache)
+    return unembed(params, cfg, ctx, x), new_cache
+
+
+# ------------------------------------------------------- chunked prefill
+def supports_chunked_prefill(cfg: ArchConfig, cache) -> bool:
+    """Chunked prefill rides the FD streaming block machinery: every
+    mixer must be a streaming ``fd`` layer (dense FFN, decoder-only) and
+    the cache must actually hold streaming leaves (REPRO_FD_STREAM=0 or a
+    params-less init_cache fall back to token-by-token prefill)."""
+    if cfg.kind != "decoder":
+        return False
+    if not all(m == "fd" and f == "dense" for m, f in cfg.layers_spec):
+        return False
+    return stream_block_of(cache) is not None
+
+
+def stream_block_of(cache) -> int | None:
+    """C of the streaming caches in a model cache tree (None if none).
+    Scan-block leaves carry a leading layer axis; ring is (…, b, C, d)."""
+    found = []
+
+    def f(path, x):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if names and names[-1] == "ring":
+            found.append(int(x.shape[-2]))
+        return x
+    jax.tree_util.tree_map_with_path(f, cache)
+    return found[0] if found else None
+
+
+def _layer_chunk(params, cfg: ArchConfig, ctx: Ctx, x, cache, cur_len):
+    """One fd+dense layer over a full C-token chunk (positions
+    [cur_len, cur_len+C), cur_len ≡ 0 mod C): the mixer goes through
+    stream_push_block; norms/FFN are position-wise, so the training-style
+    code applies unchanged."""
+    from repro.nn.layers import dense
+    bcfg = _tno_cfg(cfg, "fd", causal=True)
+    act = ACTS[bcfg.act]
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mp = params["mixer"]
+    u = act(dense(mp["wu"], h))                        # (b, C, d)
+    v = act(dense(mp["wv"], h))
+    y, cache = fd_stream.stream_push_block(cache, u, cur_len)
+    x = x + dense(mp["wo"], y.astype(x.dtype) * v).astype(x.dtype)
+    x = x + ffn_apply(params["ffn"], cfg, ctx,
+                      rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def decode_chunk(params, cfg: ArchConfig, ctx: Ctx, batch, cache, cur_len):
+    """Chunked prefill step: C prompt tokens at once. batch:
+    {"tokens": (b, C)} with C = the streaming block size and
+    cur_len ≡ 0 (mod C). Returns (logits (b, C, V_pad), new_cache) —
+    cache state afterwards is identical to C decode_step calls
+    (gated by :func:`supports_chunked_prefill`)."""
+    spec = cfg.layers_spec
+    x = embed_tokens(params, cfg, ctx, batch["tokens"])
+    new_cache: Dict[str, Any] = {}
+    if cfg.n_scan_blocks:
+        def body(x, inp):
+            bp, bc = inp
+            nc = {}
+            for i in range(cfg.period):
+                x, nc[f"sub{i}"] = _layer_chunk(bp[f"sub{i}"], cfg, ctx, x,
+                                                bc[f"sub{i}"], cur_len)
+            return x, nc
+        x, new_cache["blocks"] = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"]))
+    for i in range(cfg.n_tail_layers):
+        x, new_cache[f"tail{i}"] = _layer_chunk(
+            params[f"tail{i}"], cfg, ctx, x, cache[f"tail{i}"], cur_len)
+    x = rmsnorm(params["norm_f"], x, cfg.norm_eps)
     return unembed(params, cfg, ctx, x), new_cache
 
 

@@ -1,0 +1,4 @@
+"""NN primitives: layers (dense/rmsnorm/MLP/activations) and the boxed
+parameter utilities (logical axes, init distributions). Real package (not
+a namespace dir) so coverage accounting and ``python -m`` imports resolve
+it like every sibling."""

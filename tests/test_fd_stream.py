@@ -1,0 +1,206 @@
+"""Streaming overlap-save FD decode (kernels/fd_stream.py): exactness of
+the block scheme against the direct causal-convolution oracle, the
+push-block ≡ C-steps equivalence (chunked prefill), and the serving-level
+stream-vs-hist-replay parity across multiple C-blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fd_stream
+
+
+def _direct_causal(k, u):
+    """y[t] = Σ_{τ<=t} k[τ] u[t-τ] — O(n²) float64 oracle."""
+    ko = np.asarray(k, np.float64)
+    uo = np.asarray(u, np.float64)
+    b, n, d = uo.shape
+    y = np.zeros((b, n, d))
+    for t in range(n):
+        for tau in range(t + 1):
+            y[:, t] += ko[:, tau] * uo[:, t - tau]
+    return y
+
+
+@pytest.mark.parametrize("c,n", [(4, 16), (8, 40), (8, 37), (16, 16),
+                                 (32, 20)])
+def test_stream_step_matches_direct_conv(c, n):
+    """Token-by-token streaming == the exact causal Toeplitz action, across
+    block boundaries, partial final blocks, and C > n."""
+    b, d = 2, 5
+    k = jax.random.normal(jax.random.PRNGKey(c * n), (d, n))
+    u = jax.random.normal(jax.random.PRNGKey(c + n), (b, n, d))
+    want = _direct_causal(k, u)
+    cache = fd_stream.fd_stream_cache(k, b, n, c)
+    step = jax.jit(fd_stream.stream_step)
+    got = []
+    for t in range(n):
+        y, cache = step(cache, u[:, t], jnp.int32(t))
+        got.append(y)
+    got = np.asarray(jnp.stack(got, 1))
+    rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-12)
+    assert rel <= 1e-5
+
+
+@pytest.mark.parametrize("c", [4, 8])
+def test_push_block_equals_steps(c):
+    """Chunked prefill: one stream_push_block == C stream_step calls, in
+    outputs AND in every cache leaf (the machinery is shared)."""
+    b, d, n = 2, 3, 4 * c
+    k = jax.random.normal(jax.random.PRNGKey(0), (d, n))
+    u = jax.random.normal(jax.random.PRNGKey(1), (b, n, d))
+    c_step = fd_stream.fd_stream_cache(k, b, n, c)
+    c_push = fd_stream.fd_stream_cache(k, b, n, c)
+    ys, yp = [], []
+    for j in range(n // c):
+        for t in range(j * c, (j + 1) * c):
+            y, c_step = fd_stream.stream_step(c_step, u[:, t], jnp.int32(t))
+            ys.append(y)
+        yb, c_push = fd_stream.stream_push_block(c_push, u[:, j * c:(j + 1) * c],
+                                                 jnp.int32(j * c))
+        yp.append(yb)
+    ys = np.asarray(jnp.stack(ys, 1))
+    yp = np.asarray(jnp.concatenate(yp, 1))
+    np.testing.assert_allclose(yp, ys, rtol=1e-5, atol=1e-5)
+    for key in ("ring", "tail", "uspec_re", "uspec_im"):
+        np.testing.assert_allclose(np.asarray(c_push[key]),
+                                   np.asarray(c_step[key]),
+                                   rtol=1e-5, atol=1e-5, err_msg=key)
+
+
+def test_cache_shapes_and_block_size():
+    k = jax.random.normal(jax.random.PRNGKey(0), (3, 24))
+    cache = fd_stream.fd_stream_cache(k, 2, 24, 8)
+    assert fd_stream.is_stream_cache(cache)
+    assert fd_stream.stream_block_size(cache) == 8
+    assert cache["uspec_re"].shape == (2, 3, 9, 3)       # (b, NB, C+1, d)
+    assert cache["kseg_re"].shape == (3, 9, 3)
+    assert not fd_stream.is_stream_cache({"hist": k})
+
+
+def test_cache_rejects_short_kernel():
+    k = jax.random.normal(jax.random.PRNGKey(0), (3, 8))
+    with pytest.raises(ValueError):
+        fd_stream.fd_stream_cache(k, 1, 16, 4)
+
+
+# ----------------------------------------------------- serving-level parity
+def test_serving_stream_matches_hist_replay(monkeypatch):
+    """Full-model decode: the streaming FD cache reproduces the hist-replay
+    decode token-for-token (logits and greedy tokens) over a generation
+    spanning multiple C-blocks."""
+    monkeypatch.setenv("REPRO_FD_STREAM_C", "4")
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models.context import Ctx
+    from repro.models import serving
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"), dtype="float32",
+                           param_dtype="float32")
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    b, p, gen = 1, 3, 14                                  # spans 4 C-blocks
+    max_len = p + gen
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0, cfg.vocab)
+
+    def decode(cache):
+        toks = [prompt[:, i] for i in range(p)]
+        logits_all = []
+        for t in range(max_len - 1):
+            lg, cache = serving.decode_step(
+                params, cfg, Ctx(decode=True),
+                {"tokens": toks[t][:, None]}, cache, jnp.int32(t))
+            logits_all.append(lg[:, 0])
+            if t + 1 >= p:
+                toks.append(jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32))
+        return jnp.stack(toks, 1), jnp.stack(logits_all, 1)
+
+    hist_cache = serving.init_cache(cfg, b, max_len)
+    stream_cache = serving.init_cache(cfg, b, max_len, params=params)
+    assert serving.stream_block_of(stream_cache) == 4
+    toks_h, logits_h = decode(hist_cache)
+    toks_s, logits_s = decode(stream_cache)
+    assert np.array_equal(np.asarray(toks_h), np.asarray(toks_s))
+    np.testing.assert_allclose(np.asarray(logits_s), np.asarray(logits_h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_serving_stream_disabled_by_env(monkeypatch):
+    """REPRO_FD_STREAM=0 pins the legacy hist cache even when params are
+    available at init."""
+    monkeypatch.setenv("REPRO_FD_STREAM", "0")
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import serving
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"))
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    cache = serving.init_cache(cfg, 1, 8, params=params)
+    assert serving.stream_block_of(cache) is None
+    assert not serving.supports_chunked_prefill(cfg, cache)
+
+
+def test_generate_chunked_prefill_matches_plain(monkeypatch):
+    """launch/serve.generate with chunked prefill (block machinery) emits
+    the same tokens as token-by-token prefill, streaming and hist."""
+    monkeypatch.setenv("REPRO_FD_STREAM_C", "4")
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import generate
+    from repro.launch.steps import StepBuilder
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"), dtype="float32",
+                           param_dtype="float32")
+    mesh = make_host_mesh()
+    sb = StepBuilder(cfg, mesh)
+    with mesh:
+        params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0,
+                                    cfg.vocab)
+        toks_chunked = generate(sb, params, prompt, 10)
+        toks_plain = generate(sb, params, prompt, 10, chunked_prefill=False)
+        monkeypatch.setenv("REPRO_FD_STREAM", "0")
+        toks_hist = generate(sb, params, prompt, 10)
+    assert np.array_equal(np.asarray(toks_chunked), np.asarray(toks_plain))
+    assert np.array_equal(np.asarray(toks_chunked), np.asarray(toks_hist))
+
+
+def test_generate_edge_cases(monkeypatch):
+    """gen_len=0 returns the prompt unchanged (no phantom token), and an
+    explicit chunked_prefill=True on an unsupported cache raises instead
+    of running the wrong machinery."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import generate
+    from repro.launch.steps import StepBuilder
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"))
+    mesh = make_host_mesh()
+    sb = StepBuilder(cfg, mesh)
+    with mesh:
+        params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0,
+                                    cfg.vocab)
+        toks = generate(sb, params, prompt, 0)
+        assert np.array_equal(np.asarray(toks), np.asarray(prompt))
+        one = generate(sb, params, prompt[:, :1], 0)   # p=1, logits never set
+        assert np.array_equal(np.asarray(one), np.asarray(prompt[:, :1]))
+        monkeypatch.setenv("REPRO_FD_STREAM", "0")     # hist cache
+        with pytest.raises(ValueError):
+            generate(sb, params, prompt, 4, chunked_prefill=True)
+
+
+def test_fd_stream_env_rejects_typos(monkeypatch):
+    from repro.kernels import backend
+    monkeypatch.setenv("REPRO_FD_STREAM", "off")
+    assert not backend.fd_stream_enabled()
+    monkeypatch.setenv("REPRO_FD_STREAM", "on")
+    assert backend.fd_stream_enabled()
+    monkeypatch.setenv("REPRO_FD_STREAM", "offf")
+    with pytest.raises(ValueError):
+        backend.fd_stream_enabled()

@@ -281,6 +281,54 @@ def test_omega_grid_cache_holds_no_device_buffers():
     assert spec.shape == (2, 9)
 
 
+def test_ski_grid_caches_hold_no_device_buffers():
+    """Regression (ISSUE 4, ROADMAP open item): core/ski's make_inducing /
+    _warped_lag_grid used to lru_cache concrete jax.Arrays keyed only on
+    the grid geometry — stale device buffers leaked across backend/device
+    switches (the same bug fixed for fd._omega_grid in PR 3). The caches
+    must hold host numpy; device views are produced per call site."""
+    from repro.core import ski
+    ski._make_inducing_host.cache_clear()
+    lo_c, w_c, h_c = ski._make_inducing_host(32, 5)
+    assert isinstance(lo_c, np.ndarray) and isinstance(w_c, np.ndarray)
+    assert not isinstance(lo_c, jax.Array)
+    assert ski._make_inducing_host(32, 5)[0] is lo_c     # memoised
+    # public API returns device views matching a fresh computation
+    lo, w_lo, h = ski.make_inducing(32, 5)
+    assert isinstance(lo, jax.Array) and isinstance(w_lo, jax.Array)
+    hh = 31 / 4
+    f = np.arange(32, dtype=np.float32) / np.float32(hh)
+    want_lo = np.clip(np.floor(f).astype(np.int32), 0, 3)
+    np.testing.assert_array_equal(np.asarray(lo), want_lo)
+    np.testing.assert_allclose(np.asarray(w_lo),
+                               np.clip(1.0 - (f - want_lo), 0.0, 1.0),
+                               rtol=1e-6, atol=1e-6)
+    assert h == hh
+
+    ski._warped_lag_grid_host.cache_clear()
+    warped_c = ski._warped_lag_grid_host(4, 2.0, 0.9)
+    assert isinstance(warped_c, np.ndarray)
+    assert not isinstance(warped_c, jax.Array)
+    assert ski._warped_lag_grid_host(4, 2.0, 0.9) is warped_c
+    got = ski._warped_lag_grid(4, 2.0, 0.9)
+    assert isinstance(got, jax.Array)
+    lag = np.arange(-3, 4, dtype=np.float32) * 2.0
+    want = np.sign(lag) * 0.9 ** np.abs(lag)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-6)
+    # matches the rpe warp it mirrors
+    np.testing.assert_allclose(
+        np.asarray(inverse_time_warp(jnp.asarray(lag), 0.9)),
+        np.asarray(got), rtol=1e-6, atol=1e-6)
+    # still concrete when first touched under a jit trace
+    ski._make_inducing_host.cache_clear()
+    ski._warped_lag_grid_host.cache_clear()
+    cfg = ski.SKIConfig(d=2, rank=4, filter_size=2)
+    params, _ = unbox(ski.ski_init(jax.random.PRNGKey(0), cfg))
+    y = jax.jit(lambda p, x: ski.ski_tno_apply(p, cfg, x))(
+        params, jnp.ones((1, 16, 2)))
+    assert y.shape == (1, 16, 2)
+
+
 def test_baseline_tno_decay_bias():
     """λ^|t| multiplies the RPE output in the baseline (eliminated in the
     paper's variants)."""

@@ -1,0 +1,80 @@
+"""Serving parity matrix: for every decode-supported mixer family
+({tno, fd, attention, mamba}), prefill + token-by-token decode must
+reproduce the one-shot training-style forward logits position-by-position,
+at atol-tiered fp32/bf16 precision. (The FD streaming-vs-hist parity lives
+in tests/test_fd_stream.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.context import Ctx
+from repro.models import serving
+from repro.models.transformer import forward, init_model
+from repro.nn.params import unbox
+
+# one arch per mixer family (smoke-reduced); tnn archs are the paper's own
+MIXER_ARCHS = {
+    "tno": "tnn-lm-wt103",
+    "fd": "fd-tnn-lm-wt103",
+    "attention": "stablelm-3b",
+    "mamba": "mamba2-2.7b",
+}
+TOL = {"float32": dict(rtol=2e-2, atol=2e-2),
+       "bfloat16": dict(rtol=2e-1, atol=2e-1)}
+
+
+def _decode_all(params, cfg, toks, cache):
+    got = []
+    b, s = toks.shape
+    for t in range(s):
+        logits, cache = serving.decode_step(
+            params, cfg, Ctx(decode=True), {"tokens": toks[:, t:t + 1]},
+            cache, jnp.int32(t))
+        got.append(logits[:, 0])
+    return jnp.stack(got, 1)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("mixer", sorted(MIXER_ARCHS))
+def test_decode_matches_forward_per_mixer(mixer, dtype):
+    cfg = reduce_for_smoke(get_config(MIXER_ARCHS[mixer]), dtype=dtype,
+                           param_dtype=dtype)
+    assert any(m == mixer for m, _ in cfg.layers_spec), cfg.layers_spec
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    b, s = 1, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    want, _ = forward(params, cfg, Ctx(), {"tokens": toks, "labels": toks})
+    # parameter-aware cache: fd gets the streaming cache, others unchanged
+    cache = serving.init_cache(cfg, b, s, params=params)
+    got = _decode_all(params, cfg, toks, cache)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_fd_decode_matches_forward_across_blocks(monkeypatch):
+    """FD streaming decode vs one-shot forward with a sequence spanning
+    several C-blocks plus a partial block (C=4, s=11)."""
+    monkeypatch.setenv("REPRO_FD_STREAM_C", "4")
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"), dtype="float32",
+                           param_dtype="float32")
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    b, s = 2, 11
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    want, _ = forward(params, cfg, Ctx(), {"tokens": toks, "labels": toks})
+    cache = serving.init_cache(cfg, b, s, params=params)
+    assert serving.stream_block_of(cache) == 4
+    got = _decode_all(params, cfg, toks, cache)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_init_cache_without_params_keeps_legacy_layout():
+    """Shape-only callers (dry-run input specs) must keep getting the
+    parameter-free hist cache for fd mixers — eval_shape safe."""
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"))
+    cache = jax.eval_shape(lambda: serving.init_cache(cfg, 2, 16))
+    leaves = jax.tree_util.tree_leaves_with_path(cache)
+    names = {getattr(p[-1], "key", "") for p, _ in leaves}
+    assert "hist" in names and "ring" not in names
