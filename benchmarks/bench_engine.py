@@ -1,0 +1,137 @@
+"""Continuous-batching engine throughput (ISSUE 5).
+
+Aggregate decode tok/s of the slot-based engine (repro.serving_engine)
+vs *sequential* single-request serving (``launch/serve.generate`` per
+request, warm compiled step — StepBuilder memoises the jitted serve
+step, so the sequential baseline pays tracing once, not per request) at
+S ∈ {1, 4, 16} concurrent slots. Same requests, same length bucket
+(max_len), greedy decode both sides; per-request **token-exact parity**
+is recorded alongside the timing — the speedup must come from batching,
+never from changed math.
+
+Both drivers run a warm pass first (compile) and are then timed for
+``rounds`` alternating passes with min-of-rounds (benchmarks/common.py
+discipline: robust to shared-host load drift).
+
+Results land in BENCH_engine.json; the CI gate requires S=16 aggregate
+throughput ≥ 4x sequential with parity=true on every row (measured ~8x
+on CPU smoke shapes — the batch amortises the per-step layer scan and
+small-matmul dispatch that dominate single-row decode).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report
+from repro.configs import get_config, reduce_for_smoke
+from repro.kernels import backend
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import generate
+from repro.launch.steps import StepBuilder
+from repro.models.transformer import init_model
+from repro.nn.params import unbox
+from repro.serving_engine import Engine, Request, Scheduler
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+
+def _requests(cfg, n, prompt_len, gen_len, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32)
+               for _ in range(n)]
+    # staggered budgets exercise eviction/recycle inside the timed region
+    gens = [gen_len - 4 * (i % 4) for i in range(n)]
+    return prompts, gens
+
+
+def _row(cfg, params, sb, slots, prompt_len, gen_len, max_len, rounds=2):
+    prompts, gens = _requests(cfg, slots, prompt_len, gen_len)
+    n_new = sum(gens)
+
+    def seq_pass():
+        outs = []
+        for pr, g in zip(prompts, gens):
+            toks = generate(sb, params, jnp.asarray(pr)[None], g,
+                            max_len=max_len)
+            outs.append(np.asarray(toks)[0, prompt_len:])
+        return outs
+
+    eng = Engine(cfg, params, slots=slots, max_len=max_len)
+
+    def eng_pass():
+        sched = Scheduler(eng)
+        for i, (pr, g) in enumerate(zip(prompts, gens)):
+            sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=g))
+        results, _ = sched.run()
+        return [np.asarray(results[f"r{i}"]) for i in range(slots)]
+
+    solo = seq_pass()                           # warm (compile) + reference
+    got = eng_pass()
+    parity = all(np.array_equal(g, s) for g, s in zip(got, solo))
+
+    t_seq = t_eng = float("inf")
+    for _ in range(rounds):                     # interleaved min-of-rounds
+        t0 = time.perf_counter()
+        seq_pass()
+        t_seq = min(t_seq, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng_pass()
+        t_eng = min(t_eng, time.perf_counter() - t0)
+
+    seq_tok_s, eng_tok_s = n_new / t_seq, n_new / t_eng
+    report(f"engine/S{slots}/seq_tok_s", seq_tok_s, "tok/s",
+           "sequential generate, warm jitted step")
+    report(f"engine/S{slots}/engine_tok_s", eng_tok_s, "tok/s",
+           "continuous-batching engine, aggregate")
+    report(f"engine/S{slots}/speedup", t_seq / t_eng, "x",
+           "S=16 must be >= 4x (ISSUE 5)")
+    report(f"engine/S{slots}/parity", float(parity), "bool",
+           "token-exact per request vs solo decode")
+    return {
+        "slots": slots, "requests": slots, "prompt_len": prompt_len,
+        "gen_lens": gens, "max_len": max_len, "tokens": n_new,
+        "seq_s": t_seq, "engine_s": t_eng,
+        "seq_tok_s": seq_tok_s, "engine_tok_s": eng_tok_s,
+        "speedup": t_seq / t_eng, "parity": bool(parity),
+        "decode_traces": eng.trace_counts["generate"],
+    }
+
+
+def run(smoke: bool = False):
+    # match the stream block to the prompt bucket so prefill rides whole
+    # C-blocks (one rfft per prompt) on both sides of the comparison
+    os.environ.setdefault("REPRO_FD_STREAM_C", "16")
+    cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"), dtype="float32",
+                           param_dtype="float32")
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    mesh = make_host_mesh()
+    sb = StepBuilder(cfg, mesh)
+    prompt_len, gen_len = 16, 48 if smoke else 64
+    max_len = prompt_len + gen_len
+    rows = []
+    with mesh:
+        for slots in (1, 4, 16):
+            rows.append(_row(cfg, params, sb, slots, prompt_len, gen_len,
+                             max_len, rounds=2 if smoke else 3))
+    payload = {
+        "bench": "engine",
+        "platform": backend.platform(),
+        "arch": cfg.name,
+        "results": rows,
+    }
+    try:
+        _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")
+    except OSError as e:
+        report("engine/json_write_error", 0, "", repr(e))
+
+
+if __name__ == "__main__":
+    print("name,value,unit,derived")
+    run()

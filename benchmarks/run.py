@@ -8,6 +8,9 @@
   bench_fd_fused            causal FD-TNO: fused vs per-stage pipeline +
                             streaming vs hist-replay decode
                             (writes BENCH_fd_fused.json at the repo root)
+  bench_engine              continuous-batching engine vs sequential
+                            serving at S ∈ {1,4,16} slots
+                            (writes BENCH_engine.json at the repo root)
   bench_appendix_b          Appendix B (causal-SKI negative result)
   bench_pretrain_parity     Table 1 stand-in (causal quality parity)
   bench_lra_style           Table 2 stand-in (long-range classification)
@@ -35,25 +38,30 @@ def main() -> None:
 
     print("name,value,unit,derived")
     if args.smoke:
-        from benchmarks import bench_fd_fused, bench_ski_components
+        from benchmarks import (bench_engine, bench_fd_fused,
+                                bench_ski_components)
         t0 = time.time()
         bench_ski_components.run(smoke=True)
         print(f"ski_components/_elapsed,{time.time() - t0:.1f},s,")
         t0 = time.time()
         bench_fd_fused.run(smoke=True)
         print(f"fd_fused/_elapsed,{time.time() - t0:.1f},s,")
+        t0 = time.time()
+        bench_engine.run(smoke=True)
+        print(f"engine/_elapsed,{time.time() - t0:.1f},s,")
         return
 
     from benchmarks import (bench_appendix_b, bench_complexity,
-                            bench_decay_classes, bench_fd_fused,
-                            bench_length_extrapolation, bench_lra_style,
-                            bench_pretrain_parity, bench_ski_components,
-                            bench_tno_variants)
+                            bench_decay_classes, bench_engine,
+                            bench_fd_fused, bench_length_extrapolation,
+                            bench_lra_style, bench_pretrain_parity,
+                            bench_ski_components, bench_tno_variants)
     modules = [
         ("complexity", bench_complexity),
         ("tno_variants", bench_tno_variants),
         ("ski_components", bench_ski_components),
         ("fd_fused", bench_fd_fused),
+        ("engine", bench_engine),
         ("appendix_b", bench_appendix_b),
         ("pretrain_parity", bench_pretrain_parity),
         ("lra_style", bench_lra_style),

@@ -1,0 +1,95 @@
+"""Continuous-batching serving example: N ragged requests through S
+decode slots (repro.serving_engine) with prefill→insert→generate
+scheduling, per-request token streaming, EOS/max-len eviction and slot
+recycling — then a per-request parity check against solo decode.
+
+  PYTHONPATH=src python examples/serve_engine.py --arch fd-tnn-lm-wt103
+  PYTHONPATH=src python examples/serve_engine.py --slots 4 --requests 6
+
+The parity assertion is the engine's core contract: every request's
+token stream is identical to what a dedicated single-request
+``launch/serve.generate`` call (same length bucket) produces — batching
+is a throughput optimisation, never a quality change.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fd-tnn-lm-wt103")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--no-parity", action="store_true",
+                    help="skip the (slow) solo-decode parity check")
+    args = ap.parse_args()
+
+    from repro.kernels import backend
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import generate
+    from repro.launch.steps import StepBuilder
+    from repro.models.transformer import init_model
+    from repro.nn.params import unbox
+    from repro.serving_engine import Engine, Request, Scheduler
+
+    print(f"[engine] backend: {backend.describe()}")
+    cfg = reduce_for_smoke(get_config(args.arch))
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+
+    rng = np.random.default_rng(0)
+    plens = [int(rng.integers(3, 17)) for _ in range(args.requests)]
+    gens = [int(rng.integers(8, 33)) for _ in range(args.requests)]
+    prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
+               for p in plens]
+
+    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
+    sched = Scheduler(eng)
+    streamed = {}
+    for i, (pr, g) in enumerate(zip(prompts, gens)):
+        sched.submit(Request(
+            uid=f"req{i}", prompt=pr, max_new=g,
+            on_token=lambda uid, tok: streamed.setdefault(uid, []).append(tok)))
+    t0 = time.time()
+    results, _ = sched.run()
+    dt = time.time() - t0
+    n_new = sum(len(v) for v in results.values())
+    print(f"[engine] {args.requests} ragged requests over {eng.slots} slots: "
+          f"{n_new} tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s aggregate); "
+          f"decode steps={sched.steps} prefills={sched.prefills}")
+
+    # eviction/recycle actually happened: more requests than slots means
+    # every extra request rode a recycled slot, and the jitted step never
+    # retraced across inserts/evictions
+    assert args.requests > args.slots, "demo wants recycling: requests > slots"
+    assert sched.prefills == args.requests
+    assert eng.trace_counts["generate"] == 1, eng.trace_counts
+    assert eng.trace_counts["insert"] == 1, eng.trace_counts
+    for i, g in enumerate(gens):
+        assert len(results[f"req{i}"]) == g, (i, len(results[f"req{i}"]), g)
+        assert results[f"req{i}"] == streamed[f"req{i}"]  # cb saw every token
+    print("[engine] eviction/recycle + jit-stability assertions OK")
+
+    if not args.no_parity:
+        mesh = make_host_mesh()
+        sb = StepBuilder(cfg, mesh)
+        with mesh:
+            for i, (pr, g) in enumerate(zip(prompts, gens)):
+                toks = generate(sb, params, jnp.asarray(pr)[None], g,
+                                max_len=args.max_len)
+                want = np.asarray(toks)[0, len(pr):]
+                got = np.asarray(results[f"req{i}"])
+                assert np.array_equal(got, want), (
+                    f"req{i}: engine {got[:8]} != solo {want[:8]}")
+        print(f"[engine] per-request token-exact parity vs solo decode OK "
+              f"({args.requests} requests)")
+
+
+if __name__ == "__main__":
+    main()

@@ -314,6 +314,16 @@ _DEFAULT_TARGETS = {
 
 _cache_lock = threading.Lock()
 _cache_data: dict | None = None
+_pretuned_data: dict | None = None
+
+#: shipped autotune tables (one file per platform×mode, e.g.
+#: cpu_interpret.json) — measured once and committed so fresh checkouts
+#: start from tuned blocks instead of the shape heuristic. Consulted only
+#: when ``REPRO_AUTOTUNE_CACHE`` is unset; an explicit cache file is the
+#: user saying "use exactly this table". Precedence:
+#: user cache entry > pretuned entry > autotune sweep > heuristic.
+PRETUNED_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "pretuned")
 
 
 def cache_path() -> str:
@@ -321,6 +331,27 @@ def cache_path() -> str:
         _ENV_CACHE,
         os.path.join(os.path.expanduser("~"), ".cache", "repro",
                      "autotune.json"))
+
+
+def _load_pretuned() -> dict:
+    global _pretuned_data
+    if _pretuned_data is None:
+        entries: dict = {}
+        try:
+            for fn in sorted(os.listdir(PRETUNED_DIR)):
+                if not fn.endswith(".json"):
+                    continue
+                try:
+                    with open(os.path.join(PRETUNED_DIR, fn)) as f:
+                        data = json.load(f)
+                except (OSError, ValueError):
+                    continue
+                if isinstance(data, dict):
+                    entries.update(data.get("entries", {}))
+        except OSError:
+            pass
+        _pretuned_data = entries
+    return _pretuned_data
 
 
 def _load_cache() -> dict:
@@ -347,10 +378,12 @@ def _save_cache() -> None:
 
 
 def clear_cache(memory_only: bool = False) -> None:
-    """Drop the in-memory cache (tests); optionally keep the file."""
-    global _cache_data
+    """Drop the in-memory caches (tests); optionally keep the file. The
+    pretuned table memo is reset too so env-var changes re-resolve."""
+    global _cache_data, _pretuned_data
     with _cache_lock:
         _cache_data = None
+        _pretuned_data = None
         if not memory_only:
             try:
                 os.remove(cache_path())
@@ -409,7 +442,8 @@ def _time_call(fn, iters: int = 3, warmup: int = 1) -> float:
 
 def get_blocks(kernel: str, n: int, d: int, dtype, interpret: bool,
                tune_call=None, extra: str = "") -> tuple[int, int]:
-    """(bn, bd) for a kernel instance: cache > autotune sweep > heuristic.
+    """(bn, bd) for a kernel instance:
+    cache > pretuned table (env cache unset) > autotune sweep > heuristic.
 
     ``tune_call(bn, bd)`` must execute the kernel with those blocks and
     return its output; pass it only when the inputs are concrete. ``extra``
@@ -421,6 +455,9 @@ def get_blocks(kernel: str, n: int, d: int, dtype, interpret: bool,
     key = _key(kernel, n, d, dtype, interpret, extra)
     with _cache_lock:
         hit = _load_cache().get(key)
+    if hit is None and os.environ.get(_ENV_CACHE) is None:
+        # no explicit cache file: seed from the shipped pretuned tables
+        hit = _load_pretuned().get(key)
     if hit:
         return int(hit["bn"]), int(hit["bd"])
     if tune_call is not None and autotune_enabled():

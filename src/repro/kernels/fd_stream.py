@@ -29,6 +29,17 @@ action — streaming output ≡ hist-replay output to fp accumulation order.
 refresh), which is what chunked prefill is: the prompt enters block-wise
 at FFT speed instead of token-by-token (models/serving.decode_chunk).
 
+**Ragged slots (PR 5):** ``stream_step`` accepts either one scalar
+position (all batch rows in lockstep — the single-request decode loop) or
+a ``(b,)`` per-slot position vector (continuous batching — each slot of
+the serving engine sits at its own ring phase and block index). The
+vector path is the same arithmetic applied row-wise: per-slot ring write,
+per-slot masked head taps, per-slot tail gather, and a boundary refresh
+that fires under one ``lax.cond`` whenever *any* slot completes a block,
+applied only to the slots at a boundary. The scalar path is the vector
+path with the position broadcast, so lockstep and ragged decode are
+bit-identical per row.
+
 Everything here is jnp (decode shapes are tiny and latency-bound; the
 FFTs are the kernels). Policy knobs live in kernels/backend.py:
 ``REPRO_FD_STREAM`` (enable), ``REPRO_FD_STREAM_C`` (block size C).
@@ -48,6 +59,13 @@ def is_stream_cache(cache) -> bool:
     return isinstance(cache, dict) and "ring" in cache
 
 
+def stream_capacity(cache: dict) -> int:
+    """Slot capacity (max positions) of a streaming cache. Encoded in the
+    SHAPE of the zero-element ``cap`` leaf so it is static under jit and
+    costs no memory (an int leaf would trace; shapes never do)."""
+    return cache["cap"].shape[0]
+
+
 def fd_stream_cache(k_causal: jax.Array, batch: int, max_len: int,
                     C: int) -> dict:
     """Build the overlap-save cache for one causal-TNO layer.
@@ -64,6 +82,11 @@ def fd_stream_cache(k_causal: jax.Array, batch: int, max_len: int,
     * khead (d, C), khs_re/im (F, d), kseg_re/im (NB, F, d) — kernel
       constants: head taps, head spectrum (chunked prefill), and the
       per-age tail-segment spectra
+    * cap (max_len, 0) — zero-element capacity marker: the slot capacity
+      is its leading SHAPE dim (static under jit; see stream_capacity).
+      Feeding a position >= capacity would write past the uspec block
+      table and silently corrupt the decode — callers (the serving
+      engine's insert/admission) gate on stream_capacity instead.
     """
     d, ll = k_causal.shape
     if ll < max_len:
@@ -88,78 +111,88 @@ def fd_stream_cache(k_causal: jax.Array, batch: int, max_len: int,
         "khs_re": jnp.real(khs).T, "khs_im": jnp.imag(khs).T,      # (F, d)
         "kseg_re": jnp.swapaxes(jnp.real(ks), 1, 2),               # (nb,F,d)
         "kseg_im": jnp.swapaxes(jnp.imag(ks), 1, 2),
+        "cap": jnp.zeros((max_len, 0), jnp.float32),
     }
 
 
 def _tail_from_specs(usr, usi, ksr_all, ksi_all, j):
     """Tail contributions for the block after block j retires: sum the
     cached block spectra against the kernel segment of their age
-    (block j' has age m = j+1-j' → segment index j-j'), one irfft."""
+    (block j' has age m = j+1-j' → segment index j-j'), one irfft.
+
+    ``j`` — scalar block index (lockstep) or (b,) per-slot indices
+    (ragged); the scalar case is the vector case broadcast."""
     b, nb, f, d = usr.shape
     two_c = 2 * (f - 1)
     jp = jnp.arange(nb)
-    m_idx = j - jp
-    ksr = jnp.take(ksr_all, jnp.clip(m_idx, 0, nb - 1), axis=0)
+    jv = jnp.broadcast_to(jnp.asarray(j, jnp.int32), (b,))
+    m_idx = jv[:, None] - jp[None, :]                      # (b, nb)
+    ksr = jnp.take(ksr_all, jnp.clip(m_idx, 0, nb - 1), axis=0)  # (b,nb,F,d)
     ksi = jnp.take(ksi_all, jnp.clip(m_idx, 0, nb - 1), axis=0)
     # blocks not yet retired (jp > j) hold zero spectra; the mask also
     # guards the clipped (wrong-age) segment lookup for them
-    valid = (m_idx >= 0).astype(jnp.float32)[None, :, None, None]
-    accr = jnp.sum(valid * (usr * ksr[None] - usi * ksi[None]), axis=1)
-    acci = jnp.sum(valid * (usr * ksi[None] + usi * ksr[None]), axis=1)
+    valid = (m_idx >= 0).astype(jnp.float32)[:, :, None, None]
+    accr = jnp.sum(valid * (usr * ksr - usi * ksi), axis=1)
+    acci = jnp.sum(valid * (usr * ksi + usi * ksr), axis=1)
     full = jnp.fft.irfft(accr + 1j * acci, n=two_c, axis=1)  # (b, 2C, d)
     c = f - 1
     return full[:, c - 1:2 * c - 1, :]
 
 
-def _retire(ring, usr, usi, ksr, ksi, j):
-    """Cache the retiring block's spectrum (the one new length-2C rfft of
-    the boundary) and refresh the tail for the next block."""
-    u_spec = jnp.fft.rfft(ring.astype(jnp.float32), n=2 * ring.shape[1],
-                          axis=1)                          # (b, F, d)
-    usr = jax.lax.dynamic_update_slice(
-        usr, jnp.real(u_spec)[:, None], (0, j, 0, 0))
-    usi = jax.lax.dynamic_update_slice(
-        usi, jnp.imag(u_spec)[:, None], (0, j, 0, 0))
-    return _tail_from_specs(usr, usi, ksr, ksi, j), usr, usi
-
-
 def stream_step(cache: dict, u: jax.Array, t) -> tuple[jax.Array, dict]:
-    """One decode step: u (b, d) is the mixer input at position ``t``
-    (traced int32). Returns (y (b, d) fp32, new cache).
+    """One decode step: u (b, d) is the mixer input at position ``t`` —
+    a traced int32 scalar (every row at the same position) or a (b,)
+    vector of per-slot positions (ragged continuous batching). Returns
+    (y (b, d) fp32, new cache).
 
-    y_t = tail[t mod C] + Σ_{q=0..t mod C} khead[q]·u_{t-q}; when the
-    step completes a block, the boundary refresh runs under ``lax.cond``
-    so the O(n·d/C + d·C log C) work executes every C steps only.
+    y_t = tail[t mod C] + Σ_{q=0..t mod C} khead[q]·u_{t-q}; when a step
+    completes a block, the boundary refresh runs under ``lax.cond`` —
+    lockstep: every C steps; ragged: whenever *any* slot finishes its
+    block, applied (masked) only to the slots at a boundary, so slots
+    mid-block keep their tail/spectra bit-for-bit.
     """
     ring, tail = cache["ring"], cache["tail"]
     b, c, d = ring.shape
-    p = jnp.mod(t, c)
-    ring = jax.lax.dynamic_update_slice(
-        ring, u.astype(ring.dtype)[:, None, :], (0, p, 0))
+    nb = cache["uspec_re"].shape[1]
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))  # (b,) positions
+    p = jnp.mod(tv, c)
+    sel = jnp.arange(c)[None, :] == p[:, None]             # (b, C) ring slot
+    ring = jnp.where(sel[..., None], u.astype(ring.dtype)[:, None, :], ring)
     # direct head: ring slot i holds position T+i → lag p-i, masked to the
     # tokens of the current block seen so far
     idx = jnp.arange(c)
-    tau = p - idx
-    kmat = jnp.where(tau >= 0,
+    tau = p[:, None] - idx[None, :]                        # (b, C)
+    kmat = jnp.where(tau[None] >= 0,
                      jnp.take(cache["khead"], jnp.clip(tau, 0, c - 1),
-                              axis=1), 0.0)                # (d, C)
-    y = jnp.einsum("bcd,dc->bd", ring.astype(jnp.float32), kmat)
-    y = y + jax.lax.dynamic_slice(tail, (0, p, 0), (b, 1, d))[:, 0]
+                              axis=1), 0.0)                # (d, b, C)
+    y = jnp.einsum("bcd,dbc->bd", ring.astype(jnp.float32), kmat)
+    y = y + jnp.take_along_axis(tail, p[:, None, None], axis=1)[:, 0]
 
-    j = t // c
+    boundary = jnp.mod(tv + 1, c) == 0                     # (b,)
+    j = tv // c                                            # (b,) block index
 
     def _boundary(args):
-        ring_, usr, usi = args
-        return _retire(ring_, usr, usi, cache["kseg_re"], cache["kseg_im"],
-                       j)
+        ring_, usr, usi, tail_ = args
+        u_spec = jnp.fft.rfft(ring_.astype(jnp.float32), n=2 * c, axis=1)
+        # write each *boundary* row's block spectrum at that row's index j
+        wsel = ((jnp.arange(nb)[None, :] == jnp.clip(j, 0, nb - 1)[:, None])
+                & boundary[:, None])                       # (b, nb)
+        usr2 = jnp.where(wsel[:, :, None, None], jnp.real(u_spec)[:, None],
+                         usr)
+        usi2 = jnp.where(wsel[:, :, None, None], jnp.imag(u_spec)[:, None],
+                         usi)
+        fresh = _tail_from_specs(usr2, usi2, cache["kseg_re"],
+                                 cache["kseg_im"], j)
+        return (jnp.where(boundary[:, None, None], fresh, tail_),
+                usr2, usi2)
 
     def _keep(args):
-        del args
-        return tail, cache["uspec_re"], cache["uspec_im"]
+        _, usr, usi, tail_ = args
+        return tail_, usr, usi
 
     tail2, usr2, usi2 = jax.lax.cond(
-        jnp.mod(t + 1, c) == 0, _boundary, _keep,
-        (ring, cache["uspec_re"], cache["uspec_im"]))
+        jnp.any(boundary), _boundary, _keep,
+        (ring, cache["uspec_re"], cache["uspec_im"], tail))
     new = dict(cache, ring=ring, tail=tail2, uspec_re=usr2, uspec_im=usi2)
     return y, new
 

@@ -22,19 +22,29 @@ from repro.models import serving
 
 def generate(sb: StepBuilder, params, prompt, gen_len: int, *,
              temperature: float = 0.0, seed: int = 0,
-             chunked_prefill: bool | None = None):
+             chunked_prefill: bool | None = None,
+             max_len: int | None = None):
     """prompt: (b, p) int32. Greedy (or sampled) decode of gen_len tokens.
 
     Prefill: FD-streaming archs consume the prompt in C-token blocks
     through the overlap-save machinery (serving.decode_chunk — one rfft
     per block instead of C sequential steps); any remainder, and every
     other mixer family, is teacher-forced token-by-token. ``None`` (the
-    default) auto-detects; False forces token-by-token."""
+    default) auto-detects; False forces token-by-token.
+
+    ``max_len`` sizes the decode cache (default: exactly p + gen_len).
+    The FD/TNO kernel realisation depends on the cache length (the RPE
+    spectrum is evaluated on the rfft grid of that length), so comparing
+    against the continuous-batching engine token-for-token requires the
+    same length bucket — pass the engine's max_len here."""
     cfg = sb.cfg
     b, p = prompt.shape
-    max_len = p + gen_len
+    if max_len is None:
+        max_len = p + gen_len
+    elif max_len < p + gen_len:
+        raise ValueError(f"max_len={max_len} < prompt {p} + gen {gen_len}")
     cache = serving.init_cache(cfg, b, max_len, params=params)
-    step = jax.jit(sb.make_serve_step())
+    step = sb.serve_step_jit()
 
     key = jax.random.PRNGKey(seed)
     out = [prompt]
@@ -62,13 +72,14 @@ def generate(sb: StepBuilder, params, prompt, gen_len: int, *,
         chunked_prefill = supported
     if chunked_prefill:
         c = serving.stream_block_of(cache)
-        chunk_step = jax.jit(sb.make_chunk_step())
+        chunk_step = sb.chunk_step_jit()
         while pos + c <= p:                       # whole prompt blocks
             logits, cache = chunk_step(
                 params, {"tokens": prompt[:, pos:pos + c]}, cache,
                 jnp.int32(pos))
             pos += c
-    while pos < max_len - 1:
+    end = p + gen_len
+    while pos < end - 1:
         if pos < p:
             tok = prompt[:, pos:pos + 1]          # teacher-forced prefill
         else:
@@ -91,6 +102,11 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine: --batch requests "
+                         "through S decode slots (repro.serving_engine)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine decode slots (default REPRO_ENGINE_SLOTS)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -108,6 +124,31 @@ def main(argv=None):
         prompt = jnp.asarray(
             rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
             jnp.int32)
+        if args.engine:
+            if args.temperature > 0:
+                # the engine is greedy-only (its parity contract is
+                # token-exactness vs solo decode); refuse rather than
+                # silently return greedy tokens for a sampled request
+                ap.error("--engine does not support --temperature > 0 "
+                         "(greedy-only; sampled decode with per-slot RNG "
+                         "lanes is a ROADMAP item)")
+            from repro.serving_engine import Engine, Request, Scheduler
+            eng = Engine(cfg, params, slots=args.slots,
+                         max_len=args.prompt_len + args.gen_len)
+            sched = Scheduler(eng)
+            for i in range(args.batch):
+                sched.submit(Request(uid=f"req{i}",
+                                     prompt=np.asarray(prompt[i]),
+                                     max_new=args.gen_len))
+            t0 = time.time()
+            results, _ = sched.run()
+            dt = time.time() - t0
+            n_new = sum(len(v) for v in results.values())
+            print(f"[serve] engine({eng.slots} slots) generated {n_new} "
+                  f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s); "
+                  f"steps={sched.steps} prefills={sched.prefills}; "
+                  f"sample: {results['req0'][:16]}")
+            return 0
         t0 = time.time()
         toks = generate(sb, params, prompt, args.gen_len,
                         temperature=args.temperature, seed=args.seed)

@@ -81,6 +81,7 @@ class StepBuilder:
         self.ctx = Ctx(mesh=mesh, data_axes=data_axes, use_pallas=use_pallas,
                        seq_shard_resid=mesh is not None)
         self._axes_tree = None
+        self._jit_steps: Dict[Any, Any] = {}
 
     # ------------------------------------------------------------ params
     def abstract_params(self):
@@ -185,6 +186,23 @@ class StepBuilder:
             return serving.decode_chunk(params, cfg, ctx, batch, cache,
                                         cur_len)
         return chunk_step
+
+    def serve_step_jit(self, shape: Optional[ShapeSpec] = None):
+        """Memoised ``jax.jit`` of :meth:`make_serve_step` — repeated
+        ``generate`` calls on one StepBuilder reuse the compiled step
+        instead of retracing per request (sequential serving used to pay
+        a full trace+compile per generation)."""
+        key = ("serve", shape.name if shape else None)
+        if key not in self._jit_steps:
+            self._jit_steps[key] = jax.jit(self.make_serve_step(shape))
+        return self._jit_steps[key]
+
+    def chunk_step_jit(self, shape: Optional[ShapeSpec] = None):
+        """Memoised ``jax.jit`` of :meth:`make_chunk_step`."""
+        key = ("chunk", shape.name if shape else None)
+        if key not in self._jit_steps:
+            self._jit_steps[key] = jax.jit(self.make_chunk_step(shape))
+        return self._jit_steps[key]
 
     # ------------------------------------------------------- input specs
     def batch_sharding(self):

@@ -179,9 +179,13 @@ def attn_decode(params, cfg: ArchConfig, ctx: Ctx, x, cache, cur_len,
                 *, mask_kind="causal", window: int = 0):
     """One-token decode. x: (b, 1, d); cache k/v (b, S, kvh, hd) seq-sharded.
 
-    Returns (y (b,1,d), new_cache). Flash-decoding: the cache stays sharded
-    over `model` on the sequence axis; the softmax reduction crosses shards
-    (psum inserted by GSPMD)."""
+    ``cur_len`` — traced int32 scalar (lockstep decode) or (b,) per-slot
+    positions (ragged continuous batching: per-row RoPE angle, per-row KV
+    write position, per-row causal/local validity). The scalar case is the
+    vector case broadcast, so lockstep and ragged are bit-identical per
+    row. Returns (y (b,1,d), new_cache). Flash-decoding: the cache stays
+    sharded over `model` on the sequence axis; the softmax reduction
+    crosses shards (psum inserted by GSPMD)."""
     b, _, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = (x @ params["wq"].astype(x.dtype)).reshape(b, 1, h, hd)
@@ -191,25 +195,27 @@ def attn_decode(params, cfg: ArchConfig, ctx: Ctx, x, cache, cur_len,
         q = q + params["bq"].astype(x.dtype).reshape(1, 1, h, hd)
         k_new = k_new + params["bk"].astype(x.dtype).reshape(1, 1, kvh, hd)
         v_new = v_new + params["bv"].astype(x.dtype).reshape(1, 1, kvh, hd)
-    pos = jnp.full((1,), cur_len, jnp.int32)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    pos = cur[:, None]                                     # (b, 1)
     q = rope(q, pos, cfg.rope_theta)
     k_new = rope(k_new, pos, cfg.rope_theta)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cur_len, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cur_len, axis=1)
+    sk = cache["k"].shape[1]
+    k_pos = jnp.arange(sk)
+    wsel = (k_pos[None, :] == cur[:, None])[..., None, None]   # (b, S, 1, 1)
+    ck = jnp.where(wsel, k_new.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(wsel, v_new.astype(cache["v"].dtype), cache["v"])
     ck = shard(ctx, ck, "batch", "seq_kv", "kv_heads", "head_dim")
     cv = shard(ctx, cv, "batch", "seq_kv", "kv_heads", "head_dim")
 
-    sk = ck.shape[1]
-    k_pos = jnp.arange(sk)
-    valid = k_pos <= cur_len
+    valid = k_pos[None, :] <= cur[:, None]                 # (b, S)
     if mask_kind == "local" and window:
-        valid = valid & (cur_len - k_pos < window)
+        valid = valid & (cur[:, None] - k_pos[None, :] < window)
     g = h // kvh
     qg = q.reshape(b, 1, kvh, g, hd)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
                         ck.astype(jnp.float32)) * scale
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv.astype(jnp.float32))
     o = o.reshape(b, 1, h * hd).astype(x.dtype)

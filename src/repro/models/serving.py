@@ -16,6 +16,22 @@ feeds C tokens at once through the same block machinery, which is what
 chunked prefill is. ``REPRO_FD_STREAM=0`` pins the legacy hist cache.
 SKI decode is deliberately unsupported: the paper's Appendix B shows causal
 masking negates SKI's benefit; causal serving uses FD/TNO kernels.
+
+**Ragged positions (PR 5):** ``decode_step`` takes ``cur_len`` either as
+one traced scalar (every batch row at the same position — the classic
+single-request loop) or as a ``(b,)`` vector of per-slot positions (the
+continuous-batching engine, repro.serving_engine: each row is a slot
+serving a different request at its own length). Every mixer's decode is
+written so the scalar case is the vector case broadcast — lockstep and
+ragged decode are bit-identical per row.
+
+**Plan reuse (PR 5):** the hist-replay fallback used to re-realise the
+per-layer kernel (the RPE spectrum / coefficient evaluation) on *every*
+decode step. ``init_cache(params=...)`` now realises it once per layer
+into the cache (``kcoef`` leaf, (d, max_len) causal taps — the length
+bucket is the cache's max_len) and ``_tno_decode`` replays from it;
+:data:`PLAN_EVALS` counts realisations so tests can pin "one evaluation
+per (layer, length-bucket)".
 """
 from __future__ import annotations
 
@@ -38,6 +54,27 @@ from repro.nn.layers import ACTS, rmsnorm
 
 
 # ------------------------------------------------------------- cache init
+#: realisation counter for the per-layer decode kernel (RPE spectrum /
+#: coefficient evaluation), keyed by mixer. Bumped once per realisation
+#: *trace* — with plan reuse that is once per (sub-layer, length-bucket)
+#: at cache init (scan blocks share one vmapped trace), never per step.
+PLAN_EVALS: Dict[str, int] = {"fd": 0, "tno": 0}
+
+
+def _realise_kcoef(cfg: ArchConfig, mixer: str, layer_params,
+                   max_len: int) -> jax.Array:
+    """(d, max_len) causal kernel taps for a tno/fd layer — exactly what
+    the per-step hist-replay evaluation produces for s = max_len."""
+    PLAN_EVALS[mixer] = PLAN_EVALS.get(mixer, 0) + 1
+    bcfg = _tno_cfg(cfg, mixer, causal=True)
+    if mixer == "fd":
+        kt = fd_mod.fd_kernel_time(layer_params["tno"], bcfg.tno.fd_cfg(),
+                                   max_len)
+        return kt[:, :max_len]                         # lags 0..max_len-1
+    return tno_mod.baseline_coeffs(layer_params["tno"], bcfg.tno,
+                                   max_len)[:, max_len - 1:]
+
+
 def _layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
                  dtype, layer_params=None):
     if mixer in ("attention", "local"):
@@ -48,22 +85,27 @@ def _layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
             and backend.fd_stream_enabled():
         # overlap-save streaming cache: needs the layer's causal kernel,
         # hence the params (same kernel the hist path realises per step)
-        bcfg = _tno_cfg(cfg, mixer, causal=True)
-        kt = fd_mod.fd_kernel_time(layer_params["mixer"]["tno"],
-                                   bcfg.tno.fd_cfg(), max_len)
-        return fd_stream.fd_stream_cache(kt[:, :max_len], batch, max_len,
+        kt = _realise_kcoef(cfg, mixer, layer_params["mixer"], max_len)
+        return fd_stream.fd_stream_cache(kt, batch, max_len,
                                          backend.fd_stream_block())
     if mixer in ("tno", "fd"):
-        return {"hist": jnp.zeros((batch, max_len, cfg.d_model), dtype)}
+        hist = {"hist": jnp.zeros((batch, max_len, cfg.d_model), dtype)}
+        if layer_params is not None:
+            # plan reuse: realise the causal kernel ONCE per layer per
+            # length bucket instead of re-evaluating the RPE every step
+            hist["kcoef"] = _realise_kcoef(cfg, mixer,
+                                           layer_params["mixer"], max_len)
+        return hist
     raise NotImplementedError(f"decode for mixer {mixer} (ski: Appendix B)")
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
                params=None):
     """Per-layer decode caches. ``params`` (optional) enables the
-    parameter-derived caches — currently the FD streaming cache; without
-    it (shape-only callers: dry-run input specs, eval_shape) every mixer
-    gets its parameter-free layout (fd falls back to hist-replay)."""
+    parameter-derived caches — the FD streaming cache and the memoised
+    hist-fallback kernel (``kcoef``); without it (shape-only callers:
+    dry-run input specs, eval_shape) every mixer gets its parameter-free
+    layout (fd falls back to per-step hist-replay)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     spec = cfg.layers_spec
 
@@ -74,8 +116,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
                     else block_params[f"sub{i}"])
                 for i in range(cfg.period)}
 
-    needs_params = (params is not None and backend.fd_stream_enabled()
-                    and any(m == "fd" for m, _ in spec))
+    needs_params = (params is not None
+                    and any(m in ("tno", "fd") for m, _ in spec))
     cache: Dict[str, Any] = {}
     if cfg.n_scan_blocks:
         if needs_params:
@@ -94,6 +136,29 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
             cfg, spec[li][0], batch, max_len, dtype,
             None if params is None else params.get(f"tail{i}"))
     return cache
+
+
+def cache_capacity(cache) -> int | None:
+    """Slot capacity (max positions a slot can hold) of a model cache
+    tree, read from static leaf shapes: the min over attention KV /
+    hist-replay sequence extents and streaming-cache ``cap`` markers.
+    None when the cache has no length-bounded leaf (e.g. pure-mamba:
+    O(1) state, unbounded). The serving engine gates admission on this —
+    an over-capacity insert would silently clamp/corrupt the cache."""
+    caps = []
+
+    def f(path, x):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        leaf = names[-1] if names else ""
+        if leaf in ("k", "v"):
+            caps.append(int(x.shape[-3]))
+        elif leaf == "hist":
+            caps.append(int(x.shape[-2]))
+        elif leaf == "cap":
+            caps.append(int(x.shape[-2]))
+        return x
+    jax.tree_util.tree_map_with_path(f, cache)
+    return min(caps) if caps else None
 
 
 def shard_cache(cfg: ArchConfig, ctx: Ctx, cache):
@@ -116,8 +181,12 @@ def _tno_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, x, cache,
                 cur_len):
     """GTU decode: cache the TNO input stream u; y_t = Σ k[τ] u_{t-τ}.
 
-    FD mixers with a streaming cache take the O(d)-per-token overlap-save
-    step (kernels/fd_stream.py) instead of replaying the history."""
+    ``cur_len`` — traced scalar or (b,) per-slot positions (ragged). FD
+    mixers with a streaming cache take the O(d)-per-token overlap-save
+    step (kernels/fd_stream.py) instead of replaying the history; the
+    hist fallback replays against the memoised ``kcoef`` taps when the
+    cache carries them (params-aware init), else re-realises per step
+    (shape-only caches — counted in :data:`PLAN_EVALS`)."""
     from repro.nn.layers import dense
     bcfg = _tno_cfg(cfg, mixer, causal=True)
     act = ACTS[bcfg.act]
@@ -129,23 +198,30 @@ def _tno_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, x, cache,
         # GTU internals may run fp32 (transformer.mixer_apply casts the
         # training path back too): keep the residual dtype stable
         return dense(params["wo"], o * v).astype(x.dtype), cache
-    hist = jax.lax.dynamic_update_slice_in_dim(
-        cache["hist"], u.astype(cache["hist"].dtype), cur_len, axis=1)
-    s = hist.shape[1]
-    if mixer == "fd":
+    b = x.shape[0]
+    s = cache["hist"].shape[1]
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    idx = jnp.arange(s)
+    wsel = (idx[None, :] == cur[:, None])[..., None]    # (b, s, 1)
+    hist = jnp.where(wsel, u.astype(cache["hist"].dtype), cache["hist"])
+    if "kcoef" in cache:
+        k_causal = cache["kcoef"]                       # memoised plan
+    elif mixer == "fd":
+        PLAN_EVALS[mixer] = PLAN_EVALS.get(mixer, 0) + 1
         kt = fd_mod.fd_kernel_time(params["tno"], bcfg.tno.fd_cfg(), s)
         k_causal = kt[:, :s]                            # (d, s) lags 0..s-1
     else:
+        PLAN_EVALS[mixer] = PLAN_EVALS.get(mixer, 0) + 1
         k_causal = tno_mod.baseline_coeffs(params["tno"], bcfg.tno, s)[:, s - 1:]
     # y_t = Σ_{τ=0..cur_len} k[τ] u[t-τ]; history index j = cur_len - τ
-    idx = jnp.arange(s)
-    tau = cur_len - idx                                 # lag of each slot
-    valid = tau >= 0
-    kmat = jnp.where(valid[None, :], jnp.take(k_causal, jnp.clip(tau, 0, s - 1),
-                                              axis=1), 0.0)  # (d, s)
-    o = jnp.einsum("bsd,ds->bd", hist.astype(jnp.float32),
+    tau = cur[:, None] - idx[None, :]                   # (b, s) lag per slot
+    kmat = jnp.where(tau[None] >= 0,
+                     jnp.take(k_causal, jnp.clip(tau, 0, s - 1), axis=1),
+                     0.0)                               # (d, b, s)
+    o = jnp.einsum("bsd,dbs->bd", hist.astype(jnp.float32),
                    kmat.astype(jnp.float32))[:, None, :].astype(x.dtype)
-    return dense(params["wo"], o * v).astype(x.dtype), {"hist": hist}
+    new = dict(cache, hist=hist)
+    return dense(params["wo"], o * v).astype(x.dtype), new
 
 
 # ------------------------------------------------------------- layer step
@@ -179,6 +255,8 @@ def _layer_decode(params, cfg: ArchConfig, ctx: Ctx, mixer: str, ffn: str,
 
 def decode_step(params, cfg: ArchConfig, ctx: Ctx, batch, cache, cur_len):
     """One new token. batch: {"tokens": (b, 1)} (+ "enc_out" for encdec).
+    ``cur_len``: traced int32 scalar (all rows at the same position) or a
+    (b,) vector of per-slot positions (ragged continuous batching).
 
     Returns (logits (b, 1, V_pad), new_cache)."""
     spec = cfg.layers_spec

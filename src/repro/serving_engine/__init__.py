@@ -1,0 +1,15 @@
+"""Continuous-batching TNN serving engine (PR 5).
+
+Slot-based decode state + prefill→insert→generate loop over the ragged
+(per-slot cur_len) decode path of models/serving.py — see state.py /
+engine.py / scheduler.py and README "Serving engine".
+"""
+from repro.serving_engine.engine import Engine, default_slots
+from repro.serving_engine.scheduler import Request, Scheduler
+from repro.serving_engine.state import (DecodeState, init_decode_state,
+                                        insert, insert_prefix_cache, release)
+
+__all__ = [
+    "Engine", "default_slots", "Request", "Scheduler", "DecodeState",
+    "init_decode_state", "insert", "insert_prefix_cache", "release",
+]

@@ -1,0 +1,179 @@
+"""Continuous-batching inference engine: prefill → insert → generate.
+
+The device-side half of the serving engine (the host-side queue lives in
+:mod:`repro.serving_engine.scheduler`). Three jit-stable functions over a
+:class:`~repro.serving_engine.state.DecodeState` of S slots:
+
+* ``prefill(prompt)`` — run one request's prompt through a **batch-1**
+  cache and return ``(prefix_cache, first_token, prompt_len)``. FD
+  streaming archs consume the prompt in C-token blocks through the
+  overlap-save machinery (serving.decode_chunk — PR 4's chunked
+  prefill); the remainder, and every other mixer family, is
+  teacher-forced token-by-token. Exactly the math of the solo
+  ``launch/serve.generate`` prefill, so engine output is token-exact
+  against solo decode.
+* ``insert(state, prefix, plen, token, slot)`` — tree-map slice-in of
+  the prefix cache into a free slot without touching other slots'
+  rows (in-flight requests keep decoding across inserts).
+* ``generate(state)`` — ONE batched masked decode_step over all S slots
+  at their per-slot positions; advances only active slots, greedy-picks
+  each slot's next token.
+
+jit-stability contract: at fixed S, the decode loop never retraces
+across steps, inserts, or evictions — positions/slot indices/tokens are
+traced scalars and vectors, shapes depend only on (S, max_len, C).
+``trace_counts`` exposes the per-function trace counters the contract
+test pins. Slot count defaults to ``REPRO_ENGINE_SLOTS`` (8).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serving
+from repro.models.config import ArchConfig
+from repro.models.context import Ctx
+from repro.serving_engine import state as st
+
+_ENV_SLOTS = "REPRO_ENGINE_SLOTS"
+
+
+def default_slots() -> int:
+    v = os.environ.get(_ENV_SLOTS)
+    if v is None or v == "":
+        return 8
+    s = int(v)
+    if s < 1:
+        raise ValueError(f"{_ENV_SLOTS}={s} must be >= 1")
+    return s
+
+
+class Engine:
+    """Bind (cfg, params, S slots, max_len) and build the jitted step
+    functions once. Greedy decoding (temperature 0) — the parity
+    contract against solo decode is token-exactness."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int | None = None,
+                 max_len: int = 256, ctx: Ctx | None = None, dtype=None):
+        if cfg.kind != "decoder":
+            raise NotImplementedError(
+                f"serving engine supports decoder archs, got {cfg.kind}")
+        self.cfg = cfg
+        self.params = params
+        self.slots = default_slots() if slots is None else int(slots)
+        if self.slots < 1:
+            # a 0-slot engine would make the scheduler spin forever on an
+            # empty batch instead of ever draining the queue
+            raise ValueError(f"slots={self.slots} must be >= 1")
+        self.max_len = int(max_len)
+        self.ctx = ctx or Ctx(decode=True)
+        self.dtype = dtype
+        # one reusable batch-1 prefix template: constants (stream kernel
+        # spectra, kcoef taps) are realised once, not per request
+        self._prefix_template = serving.init_cache(
+            cfg, 1, self.max_len, dtype, params=params)
+        cap = serving.cache_capacity(self._prefix_template)
+        self.capacity = cap          # None = length-unbounded (pure mamba)
+        self._chunk_c = (serving.stream_block_of(self._prefix_template)
+                         if serving.supports_chunked_prefill(
+                             cfg, self._prefix_template) else None)
+        self.trace_counts = {"generate": 0, "insert": 0, "decode1": 0,
+                             "chunk1": 0}
+        self._generate = jax.jit(self._make("generate", self._generate_fn))
+        self._insert = jax.jit(self._make("insert", self._insert_fn))
+        self._decode1 = jax.jit(self._make("decode1", self._decode1_fn))
+        self._chunk1 = (jax.jit(self._make("chunk1", self._chunk1_fn))
+                        if self._chunk_c else None)
+
+    # ------------------------------------------------------------ plumbing
+    def _make(self, name, fn):
+        def counted(*args):
+            self.trace_counts[name] += 1
+            return fn(*args)
+        return counted
+
+    def _pick(self, logits):
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return jnp.minimum(nxt, self.cfg.vocab - 1).astype(jnp.int32)
+
+    # ------------------------------------------------------- traced bodies
+    def _decode1_fn(self, params, tok, cache, pos):
+        return serving.decode_step(params, self.cfg, self.ctx,
+                                   {"tokens": tok}, cache, pos)
+
+    def _chunk1_fn(self, params, tok, cache, pos):
+        return serving.decode_chunk(params, self.cfg, self.ctx,
+                                    {"tokens": tok}, cache, pos)
+
+    def _insert_fn(self, state, prefix, slot, plen, token):
+        return st.insert(state, prefix, slot, plen, token)
+
+    def _generate_fn(self, params, state):
+        # inactive slots step at position 0 with a pad token: harmless
+        # writes into scratch rows (the next insert overwrites the whole
+        # row) and — deliberately — never on a stream-block boundary, so
+        # parked slots cannot trigger the FD tail refresh
+        cur = jnp.where(state.active, state.cur_len, 0)
+        toks = jnp.where(state.active, state.tokens, 0)[:, None]
+        logits, cache = serving.decode_step(
+            params, self.cfg, self.ctx, {"tokens": toks}, state.cache, cur)
+        nxt = self._pick(logits)
+        new_state = st.DecodeState(
+            cache=cache,
+            cur_len=jnp.where(state.active, state.cur_len + 1,
+                              state.cur_len),
+            tokens=jnp.where(state.active, nxt, state.tokens),
+            active=state.active,
+        )
+        return new_state, nxt
+
+    # -------------------------------------------------------------- public
+    def init_state(self) -> st.DecodeState:
+        return st.init_decode_state(self.cfg, self.params, self.slots,
+                                    self.max_len, self.dtype)
+
+    def prefill(self, prompt):
+        """prompt: (p,) or (1, p) int tokens. Returns (prefix_cache,
+        first_token (device scalar), prompt_len). Raises when the prompt
+        alone exceeds the slot capacity (an oversized insert would clamp
+        the cache writes and silently corrupt the ring/KV rows)."""
+        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        p = prompt.shape[1]
+        if p < 1:
+            raise ValueError("empty prompt")
+        if self.capacity is not None and p > self.capacity:
+            raise ValueError(
+                f"prompt length {p} exceeds slot capacity "
+                f"{self.capacity} (cache max_len {self.max_len}); "
+                "raise Engine(max_len=...) or reject the request")
+        cache = self._prefix_template
+        pos = 0
+        logits = None
+        if self._chunk_c:
+            c = self._chunk_c
+            while pos + c <= p:
+                logits, cache = self._chunk1(
+                    self.params, prompt[:, pos:pos + c], cache,
+                    jnp.int32(pos))
+                pos += c
+        while pos < p:
+            logits, cache = self._decode1(
+                self.params, prompt[:, pos:pos + 1], cache, jnp.int32(pos))
+            pos += 1
+        return cache, self._pick(logits)[0], p
+
+    def insert(self, state, prefix_cache, plen, token, slot):
+        """Admit a prefilled request into ``slot`` (traced index — no
+        retrace across slots)."""
+        return self._insert(state, prefix_cache, jnp.int32(slot),
+                            jnp.int32(plen), jnp.asarray(token, jnp.int32))
+
+    def generate(self, state):
+        """One batched decode step: (state, tokens (S,)) — read tokens
+        only for slots that were active going in."""
+        return self._generate(self.params, state)
+
+    def release(self, state, slot: int):
+        return st.release(state, slot)

@@ -1,0 +1,122 @@
+"""Host-side scheduler: request queue, slot admission, token streaming.
+
+Drives an :class:`~repro.serving_engine.engine.Engine` with the classic
+continuous-batching loop (MaxText/JetStream offline_inference shape):
+
+    while work:
+        if free slot and queued request:   # greedy prefill-first
+            prefix, first, p = engine.prefill(request)   # C-block chunked
+            state = engine.insert(state, prefix, p, first, slot)
+        else:
+            state, tokens = engine.generate(state)       # all slots, 1 step
+        stream tokens to per-request callbacks; evict EOS/max-len slots,
+        recycle them for the queue
+
+Admission is *greedy prefill-first*: whenever a slot is free and a
+request is queued, the scheduler prefills and inserts before taking the
+next decode step, so the batch refills as soon as capacity exists —
+decode steps then amortise the model over every live request. Eviction
+is immediate: a slot is released the step its request finishes (EOS hit
+or ``max_new`` tokens emitted), and the freed slot admits the next
+queued request on the following loop iteration.
+
+The per-step host sync (one (S,) token transfer) is what streams tokens
+to callbacks; a production deployment would move detokenisation to a
+separate thread against an async transfer (the MaxText detokenize-thread
+pattern) — on CPU the sync is noise next to the model step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving_engine.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    uid: str
+    prompt: np.ndarray            # (p,) int32 prompt tokens
+    max_new: int                  # generation budget (tokens)
+    eos_id: Optional[int] = None  # stop token (None = run to max_new)
+    on_token: Optional[Callable[[str, int], None]] = None  # streaming cb
+
+
+class Scheduler:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: deque = deque()
+        self.results: Dict[str, List[int]] = {}
+        self.steps = 0                # decode steps taken (stats)
+        self.prefills = 0
+
+    def submit(self, req: Request) -> None:
+        """Queue a request; rejects loudly when prompt + generation could
+        not fit a slot (an over-capacity run would clamp cache writes and
+        corrupt the slot's ring/KV rows mid-generation)."""
+        p = int(np.asarray(req.prompt).shape[-1])
+        if req.max_new < 1:
+            raise ValueError(f"request {req.uid}: max_new must be >= 1")
+        cap = self.engine.capacity
+        # positions written: p prompt + (max_new - 1) fed-back tokens
+        # (the final sampled token is emitted but never fed)
+        if cap is not None and p + req.max_new - 1 > cap:
+            raise ValueError(
+                f"request {req.uid}: prompt {p} + max_new {req.max_new} "
+                f"exceeds slot capacity {cap} "
+                f"(Engine(max_len={self.engine.max_len}))")
+        if req.uid in self.results:
+            # a reused uid would merge token lists and trip the budget
+            # check early, silently truncating the later request
+            raise ValueError(f"request uid {req.uid!r} already submitted")
+        self.queue.append(req)
+        self.results[req.uid] = []
+
+    # ------------------------------------------------------------ internals
+    def _emit(self, req: Request, token: int) -> bool:
+        """Record/stream one token; returns True when the request is done
+        (EOS or budget exhausted)."""
+        self.results[req.uid].append(token)
+        if req.on_token is not None:
+            req.on_token(req.uid, token)
+        done = len(self.results[req.uid]) >= req.max_new
+        if req.eos_id is not None and token == req.eos_id:
+            done = True
+        return done
+
+    # --------------------------------------------------------------- run
+    def run(self, state=None):
+        """Drain the queue; returns ({uid: [generated tokens]}, state).
+        Reentrant: pass the returned state back in to keep serving."""
+        eng = self.engine
+        if state is None:
+            state = eng.init_state()
+        free = list(range(eng.slots))[::-1]     # pop() admits slot 0 first
+        slot_req: Dict[int, Request] = {}
+
+        while self.queue or slot_req:
+            if self.queue and free:             # greedy prefill-first
+                req = self.queue.popleft()
+                slot = free.pop()
+                prefix, first, plen = eng.prefill(req.prompt)
+                self.prefills += 1
+                tok = int(first)
+                if self._emit(req, tok):        # 1-token request: done
+                    free.append(slot)
+                    continue
+                state = eng.insert(state, prefix, plen, tok, slot)
+                slot_req[slot] = req
+                continue
+            state, toks = eng.generate(state)
+            self.steps += 1
+            toks_h = np.asarray(toks)           # host sync: stream point
+            for slot in sorted(slot_req):
+                req = slot_req[slot]
+                if self._emit(req, int(toks_h[slot])):
+                    state = eng.release(state, slot)
+                    del slot_req[slot]
+                    free.append(slot)
+        return self.results, state

@@ -1,0 +1,132 @@
+"""Slot-based decode state for the continuous-batching engine.
+
+A ``DecodeState`` is S *slots* — rows of one batched model cache — each
+serving (at most) one in-flight request at its own position. The design
+follows the standard continuous-batching substrate (MaxText/JetStream's
+prefill → insert → generate loop; Qin & Zhong 2023's constant-time TNN
+decode assumes the same shape):
+
+* ``cache``   — the models/serving cache pytree batched over S slots
+  (attention KV, mamba conv+state, TNO hist(+kcoef), FD overlap-save
+  stream leaves);
+* ``cur_len`` — **(S,) per-slot positions**: slot s's next write index.
+  Every mixer's decode accepts this vector (masked decode_step), so one
+  jitted step serves S requests at S different lengths;
+* ``tokens``  — (S,) last emitted token per slot (next step's input);
+* ``active``  — (S,) liveness mask: inactive slots are frozen (their
+  cur_len/tokens don't advance; their cache rows are scratch until the
+  next insert overwrites them).
+
+``insert_prefix_cache`` tree-maps a chunk-prefilled batch-1 cache into
+one slot of the live batch with ``dynamic_update_slice`` along each
+leaf's batch axis — no other slot's row is touched, and the
+parameter-derived leaves shared by every slot (kernel constants
+khead/khs/kseg, the memoised kcoef taps, the zero-element cap marker)
+are left alone. All functions here are jit-stable at fixed S: traced
+slot indices, no shape dependence on request lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serving
+
+#: per-slot leaves, keyed by leaf name → batch-axis position from the
+#: END of the shape (robust to the leading scan-layer axis of block
+#: leaves, same convention as serving.shard_cache):
+#:   k/v      (…, b, S, kvh, hd)   hist  (…, b, S, d)
+#:   ring/tail(…, b, C, d)         conv  (…, b, w, conv_dim)
+#:   state    (…, b, h, p, s)      uspec (…, b, NB, F, d)
+#: Leaves not listed (khead, khs_re/im, kseg_re/im, kcoef, cap) are
+#: parameter-derived constants identical for every slot: skipped.
+BATCH_AXIS_FROM_END = {
+    "k": 4, "v": 4, "hist": 3, "ring": 3, "tail": 3, "conv": 3,
+    "state": 4, "uspec_re": 4, "uspec_im": 4,
+}
+
+#: leaves shared by every slot (identical for any request under the same
+#: params/max_len) and therefore skipped by insert. Every cache leaf
+#: MUST be classified in exactly one of these two tables — an unknown
+#: name raises, because silently treating a new per-slot leaf as shared
+#: would leak the previous occupant's state into a recycled slot.
+SHARED_LEAVES = frozenset(
+    {"khead", "khs_re", "khs_im", "kseg_re", "kseg_im", "kcoef", "cap"})
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("cache", "cur_len", "tokens", "active"),
+                   meta_fields=())
+@dataclasses.dataclass
+class DecodeState:
+    cache: Any          # model cache pytree, batched over S slots
+    cur_len: jax.Array  # (S,) int32 — next write position per slot
+    tokens: jax.Array   # (S,) int32 — last emitted token per slot
+    active: jax.Array   # (S,) bool  — slot liveness
+
+    @property
+    def slots(self) -> int:
+        return self.cur_len.shape[0]
+
+
+def init_decode_state(cfg, params, slots: int, max_len: int,
+                      dtype=None) -> DecodeState:
+    """Fresh all-free state: S slot rows of zeroed caches (params-aware,
+    so fd mixers get streaming leaves and tno/fd hist leaves carry the
+    memoised kcoef plan)."""
+    cache = serving.init_cache(cfg, slots, max_len, dtype, params=params)
+    return DecodeState(
+        cache=cache,
+        cur_len=jnp.zeros((slots,), jnp.int32),
+        tokens=jnp.zeros((slots,), jnp.int32),
+        active=jnp.zeros((slots,), bool),
+    )
+
+
+def insert_prefix_cache(batched_cache, prefix_cache, slot):
+    """Slice a batch-1 prefix cache into row ``slot`` of the batched
+    cache (traced slot index — one jit trace serves every slot). Shared
+    (non-per-slot) leaves keep the batched side's value."""
+    def f(path, dst, src):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        leaf = names[-1] if names else ""
+        off = BATCH_AXIS_FROM_END.get(leaf)
+        if off is None:
+            if leaf not in SHARED_LEAVES:
+                raise NotImplementedError(
+                    f"cache leaf {leaf!r} is not classified as per-slot "
+                    "(BATCH_AXIS_FROM_END) or shared (SHARED_LEAVES); "
+                    "add it before serving this cache through the engine")
+            return dst                       # shared constant leaf
+        ax = dst.ndim - off
+        starts = [jnp.int32(0)] * dst.ndim
+        starts[ax] = jnp.asarray(slot, jnp.int32)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(starts))
+    return jax.tree_util.tree_map_with_path(f, batched_cache, prefix_cache)
+
+
+def insert(state: DecodeState, prefix_cache, slot, cur_len,
+           token) -> DecodeState:
+    """Admit a prefilled request into ``slot``: slice its cache row in,
+    set the slot's position to the prefix length, seed the first decode
+    input with the prefill's sampled token, and mark the slot live.
+    ``slot`` / ``cur_len`` / ``token`` may all be traced."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return DecodeState(
+        cache=insert_prefix_cache(state.cache, prefix_cache, slot),
+        cur_len=state.cur_len.at[slot].set(jnp.asarray(cur_len, jnp.int32)),
+        tokens=state.tokens.at[slot].set(jnp.asarray(token, jnp.int32)),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def release(state: DecodeState, slot: int) -> DecodeState:
+    """Evict a finished request: the slot is frozen (mask off) and its
+    cache row becomes scratch until the next insert recycles it."""
+    return dataclasses.replace(state,
+                               active=state.active.at[slot].set(False))

@@ -1,0 +1,81 @@
+"""Pretuned autotune tables (ISSUE 5 satellite): the shipped
+kernels/pretuned/*.json seed block sizes when no explicit cache is set,
+with precedence  user cache (REPRO_AUTOTUNE_CACHE / default path)
+> pretuned > heuristic."""
+import json
+import os
+
+import pytest
+
+from repro.kernels import backend
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache(monkeypatch, tmp_path):
+    # isolate every test from the developer's real ~/.cache file
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "unused.json"))
+    backend.clear_cache(memory_only=True)
+    yield
+    backend.clear_cache(memory_only=True)
+
+
+def _key(kernel="short_conv", n=64, d=32):
+    return backend._key(kernel, n, d, "float32", True)
+
+
+def test_pretuned_seeds_when_env_unset(monkeypatch, tmp_path):
+    pdir = tmp_path / "pretuned"
+    pdir.mkdir()
+    key = _key()
+    (pdir / "cpu_interpret.json").write_text(json.dumps(
+        {"version": 1, "entries": {key: {"bn": 16, "bd": 16}}}))
+    monkeypatch.setattr(backend, "PRETUNED_DIR", str(pdir))
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    monkeypatch.setenv("HOME", str(tmp_path))     # default cache path empty
+    backend.clear_cache(memory_only=True)
+    assert backend.get_blocks("short_conv", 64, 32, "float32", True) == (16, 16)
+
+
+def test_env_cache_wins_and_disables_pretuned(monkeypatch, tmp_path):
+    pdir = tmp_path / "pretuned"
+    pdir.mkdir()
+    key = _key()
+    other = _key(n=128)
+    (pdir / "cpu_interpret.json").write_text(json.dumps(
+        {"entries": {key: {"bn": 16, "bd": 16},
+                     other: {"bn": 24, "bd": 16}}}))
+    monkeypatch.setattr(backend, "PRETUNED_DIR", str(pdir))
+    env_cache = tmp_path / "mine.json"
+    env_cache.write_text(json.dumps(
+        {"version": 1, "entries": {key: {"bn": 32, "bd": 8}}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(env_cache))
+    backend.clear_cache(memory_only=True)
+    # explicit cache entry wins over the pretuned one
+    assert backend.get_blocks("short_conv", 64, 32, "float32", True) == (32, 8)
+    # with an explicit cache set, pretuned entries are NOT consulted:
+    # the other key falls back to the heuristic
+    assert backend.get_blocks("short_conv", 128, 32, "float32", True) == \
+        backend.heuristic_blocks("short_conv", 128, 32, True)
+
+
+def test_missing_everywhere_falls_back_to_heuristic(monkeypatch, tmp_path):
+    monkeypatch.setattr(backend, "PRETUNED_DIR", str(tmp_path / "nope"))
+    backend.clear_cache(memory_only=True)
+    assert backend.get_blocks("short_conv", 64, 32, "float32", True) == \
+        backend.heuristic_blocks("short_conv", 64, 32, True)
+
+
+def test_shipped_cpu_interpret_table_is_wellformed():
+    """The committed table parses, targets this repo's kernels, and every
+    entry carries valid block sizes."""
+    path = os.path.join(backend.PRETUNED_DIR, "cpu_interpret.json")
+    with open(path) as f:
+        data = json.load(f)
+    entries = data["entries"]
+    assert entries, "shipped pretuned table is empty"
+    known = set(backend._DEFAULT_TARGETS)
+    for key, val in entries.items():
+        kernel = key.split("|")[0]
+        assert kernel in known, key
+        assert "|cpu|interpret" in key, key
+        assert int(val["bn"]) >= 8 and int(val["bd"]) >= 8, (key, val)

@@ -77,4 +77,61 @@ def test_init_cache_without_params_keeps_legacy_layout():
     cache = jax.eval_shape(lambda: serving.init_cache(cfg, 2, 16))
     leaves = jax.tree_util.tree_leaves_with_path(cache)
     names = {getattr(p[-1], "key", "") for p, _ in leaves}
-    assert "hist" in names and "ring" not in names
+    assert "hist" in names and "ring" not in names and "kcoef" not in names
+
+
+@pytest.mark.parametrize("mixer", ["tno", "fd"])
+def test_hist_plan_realised_once_per_layer_bucket(mixer, monkeypatch):
+    """Plan reuse (ISSUE 5 satellite): with a params-aware cache the
+    per-layer kernel realisation (RPE spectrum / coefficient eval) runs
+    exactly once per (sub-layer, length-bucket) at init — NOT once per
+    decode step — and the memoised decode stays correct."""
+    if mixer == "fd":
+        monkeypatch.setenv("REPRO_FD_STREAM", "0")   # force hist fallback
+    cfg = reduce_for_smoke(get_config(MIXER_ARCHS[mixer]), dtype="float32",
+                           param_dtype="float32")
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    b, s = 1, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    want, _ = forward(params, cfg, Ctx(), {"tokens": toks, "labels": toks})
+
+    serving.PLAN_EVALS[mixer] = 0
+    cache = serving.init_cache(cfg, b, s, params=params)
+    # one realisation trace per sub-layer slot (scan blocks share one
+    # vmapped trace), none during decode
+    assert serving.PLAN_EVALS[mixer] == cfg.period
+    got = _decode_all(params, cfg, toks, cache)
+    assert serving.PLAN_EVALS[mixer] == cfg.period
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL["float32"])
+
+    # the params-less cache keeps the legacy per-step evaluation (and the
+    # counter proves it is actually counting)
+    serving.PLAN_EVALS[mixer] = 0
+    legacy = serving.init_cache(cfg, b, s)
+    _decode_all(params, cfg, toks, legacy)
+    assert serving.PLAN_EVALS[mixer] == s * cfg.period
+
+
+def test_decode_step_vector_cur_len_matches_scalar():
+    """decode_step with a (b,) position vector of equal entries is
+    bit-identical to the scalar call (the lockstep case is the ragged
+    case broadcast) — for every decode-supported mixer family."""
+    for mixer, arch in MIXER_ARCHS.items():
+        cfg = reduce_for_smoke(get_config(arch), dtype="float32",
+                               param_dtype="float32")
+        params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+        b, s = 2, 6
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                  cfg.vocab)
+        c_s = serving.init_cache(cfg, b, s, params=params)
+        c_v = jax.tree.map(lambda x: x, c_s)
+        for t in range(s):
+            lg_s, c_s = serving.decode_step(
+                params, cfg, Ctx(decode=True), {"tokens": toks[:, t:t + 1]},
+                c_s, jnp.int32(t))
+            lg_v, c_v = serving.decode_step(
+                params, cfg, Ctx(decode=True), {"tokens": toks[:, t:t + 1]},
+                c_v, jnp.full((b,), t, jnp.int32))
+            np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v),
+                                          err_msg=f"{mixer} t={t}")
