@@ -5,13 +5,26 @@ recycling — then a per-request parity check against solo decode.
 
   PYTHONPATH=src python examples/serve_engine.py --arch fd-tnn-lm-wt103
   PYTHONPATH=src python examples/serve_engine.py --slots 4 --requests 6
+  PYTHONPATH=src python examples/serve_engine.py --chaos
 
 The parity assertion is the engine's core contract: every request's
 token stream is identical to what a dedicated single-request
 ``launch/serve.generate`` call (same length bucket) produces — batching
 is a throughput optimisation, never a quality change.
+
+``--chaos`` runs the ISSUE 6 chaos parity gate instead: the same fleet
+under a deterministic FaultInjector campaign (one poisoned request with
+a persistent prefill fault, a transient decode fault, a NaN injection
+that must be quarantined, a raising streaming callback) followed by a
+mid-run SIGTERM + snapshot resume. Gate: every non-faulted request's
+token stream is bit-exact vs the fault-free baseline, every faulted
+request ends in an explicit error outcome, no slot leaks (a full second
+wave serves exactly), and the resumed run is token-exact.
 """
 import argparse
+import os
+import signal
+import tempfile
 import time
 
 import jax
@@ -19,6 +32,118 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+
+
+def _fleet(prompts, gens, uid_prefix="req", **req_kw):
+    from repro.serving_engine import Request
+    return [Request(uid=f"{uid_prefix}{i}", prompt=pr, max_new=g, **req_kw)
+            for i, (pr, g) in enumerate(zip(prompts, gens))]
+
+
+def run_chaos(args, cfg, params, prompts, gens):
+    """ISSUE 6 chaos parity gate — see module docstring."""
+    from repro.serving_engine import (Engine, FaultInjector, FaultSpec,
+                                      Scheduler)
+
+    def fresh_engine():
+        return Engine(cfg, params, slots=args.slots, max_len=args.max_len)
+
+    # ---- fault-free baseline: the token streams every later run must hit
+    sched = Scheduler(fresh_engine())
+    for r in _fleet(prompts, gens, "c"):
+        sched.submit(r)
+    baseline, _ = sched.run()
+    baseline = {u: list(t) for u, t in baseline.items()}
+    assert all(o.status == "ok" for o in sched.outcomes.values())
+    print(f"[chaos] baseline: {len(baseline)} requests, "
+          f"{sum(map(len, baseline.values()))} tokens")
+
+    # ---- wave 1 under scripted faults
+    injector = FaultInjector(specs=[
+        FaultSpec(site="prefill", uid="c1", count=99),   # poisoned request
+        FaultSpec(site="decode", at=2),                  # transient: retried
+        FaultSpec(site="decode", at=5, poison_slot=0),   # NaN -> quarantine
+        FaultSpec(site="callback", uid="c2"),            # raising callback
+    ])
+    eng = fresh_engine()
+    streamed = {}
+    sched = Scheduler(eng, injector=injector, max_retries=2,
+                      backoff_base=0.0, log=print)
+    for r in _fleet(prompts, gens, "c",
+                    on_token=lambda u, t: streamed.setdefault(u, [])
+                    .append(t)):
+        sched.submit(r)
+    results, state = sched.run()
+
+    out = sched.outcomes
+    assert out["c1"].status == "error" and "prefill" in out["c1"].error, (
+        out["c1"])
+    victims = [u for u, o in out.items()
+               if o.status == "error" and o.error
+               and "non-finite" in o.error]
+    assert len(victims) == 1, out           # exactly the poisoned slot
+    victim = victims[0]
+    # quarantined stream is a strict prefix of the baseline (tokens up to
+    # the injection are exact; garbage after it is never emitted)
+    vt = results[victim]
+    assert vt == baseline[victim][:len(vt)] and len(vt) < len(
+        baseline[victim]), (victim, vt)
+    assert out["c2"].callback_error is not None, out["c2"]
+    survivors = [u for u in baseline
+                 if u not in (victim, "c1")]
+    for u in survivors:
+        assert out[u].status == "ok", out[u]
+        assert results[u] == baseline[u], (
+            f"{u}: fault spill-over — {results[u][:8]} vs "
+            f"{baseline[u][:8]}")
+    assert sched.retries >= 1, "transient decode fault was never retried"
+    print(f"[chaos] wave 1: poisoned={['c1']}, quarantined={victim}, "
+          f"callback detached=c2, {len(survivors)} survivors bit-exact, "
+          f"retries={sched.retries}, injector fired={injector.fired}")
+
+    # ---- wave 2 through the same engine state: no slot leaks
+    sched.injector = None
+    for r in _fleet(prompts, gens, "w"):
+        sched.submit(r)
+    results2, _ = sched.run(state)
+    for i in range(len(prompts)):
+        u = f"w{i}"
+        assert sched.outcomes[u].status == "ok", sched.outcomes[u]
+        assert results2[u] == baseline[f"c{i}"], (
+            f"{u}: recycled-slot leak — {results2[u][:8]} vs "
+            f"{baseline[f'c{i}'][:8]}")
+    print(f"[chaos] wave 2: {len(prompts)} requests through recycled "
+          "slots, all bit-exact — no slot leaks")
+
+    # ---- mid-run SIGTERM + snapshot resume, token-exact continuation
+    with tempfile.TemporaryDirectory() as snap_dir:
+        emitted = {"n": 0}
+
+        def kill_after(u, t):
+            emitted["n"] += 1
+            if emitted["n"] == 11:       # mid-generation, slots in flight
+                os.kill(os.getpid(), signal.SIGTERM)
+
+        sched = Scheduler(fresh_engine(), snapshot_dir=snap_dir, log=print)
+        for r in _fleet(prompts, gens, "c", on_token=kill_after):
+            sched.submit(r)
+        sched.run()
+        assert sched.preempted, "SIGTERM did not preempt the run"
+        partial = sum(len(v) for v in sched.results.values())
+        assert partial < sum(map(len, baseline.values()))
+
+        sched2 = Scheduler(fresh_engine(), snapshot_dir=snap_dir)
+        assert sched2.try_restore(), "no committed snapshot to resume"
+        resumed, _ = sched2.run()
+        for u in baseline:
+            assert sched2.outcomes[u].status == "ok", sched2.outcomes[u]
+            assert resumed[u] == baseline[u], (
+                f"{u}: resume drift — {resumed[u][:8]} vs "
+                f"{baseline[u][:8]}")
+        print(f"[chaos] kill+resume: preempted after {partial} tokens "
+              f"(step {sched.steps}), resumed to step {sched2.steps}, "
+              "all requests token-exact vs uninterrupted baseline")
+    print("[chaos] chaos parity gate OK")
 
 
 def main():
@@ -29,6 +154,9 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--no-parity", action="store_true",
                     help="skip the (slow) solo-decode parity check")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection + kill/resume parity "
+                         "gate instead of the plain demo (ISSUE 6)")
     args = ap.parse_args()
 
     from repro.kernels import backend
@@ -48,6 +176,10 @@ def main():
     gens = [int(rng.integers(8, 33)) for _ in range(args.requests)]
     prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
                for p in plens]
+
+    if args.chaos:
+        run_chaos(args, cfg, params, prompts, gens)
+        return
 
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
     sched = Scheduler(eng)

@@ -51,6 +51,21 @@ def _tree_structure_json(treedef) -> str:
     return str(treedef)
 
 
+def _fsync_file(f):
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str):
+    """fsync a directory so renames/creates inside it are durable before
+    the commit marker goes down (the atomicity claim above)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None):
     """Synchronous atomic save of a pytree of arrays."""
     leaves, treedef = _leaf_paths(tree)
@@ -74,30 +89,38 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None):
         if arr.dtype.kind == "V" or dtype_str not in _NP_NATIVE:
             # ml_dtypes (bfloat16, fp8, ...) do not survive np.save —
             # store the raw bytes as uint8 and record the logical dtype.
-            np.save(os.path.join(tmp_dir, "data", fname),
-                    arr.view(np.uint8))
-            stored = "raw_u8"
+            to_store, stored = arr.view(np.uint8), "raw_u8"
         else:
-            np.save(os.path.join(tmp_dir, "data", fname), arr)
-            stored = dtype_str
+            to_store, stored = arr, dtype_str
+        # every data file is fsync'd before the COMMITTED marker exists:
+        # a crash between commit and a lazy page writeback must not leave
+        # a committed-but-truncated leaf behind
+        with open(os.path.join(tmp_dir, "data", fname), "wb") as f:
+            np.save(f, to_store)
+            _fsync_file(f)
         manifest["leaves"].append(
             {"file": fname, "shape": list(arr.shape), "dtype": dtype_str,
              "stored": stored})
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+        _fsync_file(f)
+    _fsync_dir(os.path.join(tmp_dir, "data"))   # dir entries durable too
+    _fsync_dir(tmp_dir)
 
     if os.path.exists(step_dir):
         shutil.rmtree(step_dir)
     os.rename(tmp_dir, step_dir)                       # atomic on POSIX
+    _fsync_dir(ckpt_dir)                               # rename durable
     marker = step_dir + ".COMMITTED"
     with open(marker, "w") as f:
         f.write(str(step))
+        _fsync_file(f)
     latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(str(step))
+        _fsync_file(f)
     os.rename(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _fsync_dir(ckpt_dir)
     return step_dir
 
 
@@ -130,9 +153,12 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
     leaves_like, treedef = _leaf_paths(tree_like)
-    assert manifest["n_leaves"] == len(leaves_like), (
-        f"checkpoint has {manifest['n_leaves']} leaves, "
-        f"model expects {len(leaves_like)}")
+    # real exceptions, not asserts: asserts vanish under `python -O`,
+    # silently restoring a mismatched checkpoint into the wrong tree
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"model expects {len(leaves_like)}")
     shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                     else [None] * len(leaves_like))
     out = []
@@ -141,8 +167,10 @@ def restore(ckpt_dir: str, tree_like: Any, *, step: Optional[int] = None,
         if meta.get("stored") == "raw_u8":
             import ml_dtypes  # noqa: F401 (registers bf16 with numpy)
             arr = arr.view(np.dtype(meta["dtype"])).reshape(meta["shape"])
-        assert tuple(arr.shape) == tuple(like.shape), (
-            f"shape mismatch {arr.shape} vs {like.shape}")
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"leaf {meta['file']}: shape mismatch "
+                f"{tuple(arr.shape)} vs {tuple(like.shape)}")
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:

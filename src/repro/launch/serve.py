@@ -107,7 +107,23 @@ def main(argv=None):
                          "through S decode slots (repro.serving_engine)")
     ap.add_argument("--slots", type=int, default=None,
                     help="engine decode slots (default REPRO_ENGINE_SLOTS)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="engine mode: seeded FaultInjector chaos run "
+                         "(deterministic prefill/decode/callback faults; "
+                         "faulted requests end in explicit error outcomes, "
+                         "the rest are unaffected)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="engine mode: per-request TTL in seconds "
+                         "(watchdog evicts expired slots)")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="engine mode: bounded request queue "
+                         "(admission rejects with QueueFull when full)")
     args = ap.parse_args(argv)
+    if not args.engine and (args.chaos is not None
+                            or args.deadline is not None
+                            or args.queue_cap is not None):
+        ap.error("--chaos/--deadline/--queue-cap require --engine "
+                 "(the supervised scheduler owns those knobs)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -132,10 +148,18 @@ def main(argv=None):
                 ap.error("--engine does not support --temperature > 0 "
                          "(greedy-only; sampled decode with per-slot RNG "
                          "lanes is a ROADMAP item)")
-            from repro.serving_engine import Engine, Request, Scheduler
+            from repro.serving_engine import (Engine, FaultInjector, Request,
+                                              Scheduler)
             eng = Engine(cfg, params, slots=args.slots,
                          max_len=args.prompt_len + args.gen_len)
-            sched = Scheduler(eng)
+            injector = None
+            if args.chaos is not None:
+                injector = FaultInjector(seed=args.chaos, rates={
+                    "prefill": 0.15, "decode": 0.02, "callback": 0.1})
+            sched = Scheduler(eng, injector=injector,
+                              default_deadline=args.deadline,
+                              queue_cap=args.queue_cap,
+                              log=print if args.chaos is not None else None)
             for i in range(args.batch):
                 sched.submit(Request(uid=f"req{i}",
                                      prompt=np.asarray(prompt[i]),
@@ -144,10 +168,20 @@ def main(argv=None):
             results, _ = sched.run()
             dt = time.time() - t0
             n_new = sum(len(v) for v in results.values())
+            by_status = {}
+            for out in sched.outcomes.values():
+                by_status[out.status] = by_status.get(out.status, 0) + 1
+            ok_uid = next((u for u, o in sched.outcomes.items()
+                           if o.status == "ok"), None)
             print(f"[serve] engine({eng.slots} slots) generated {n_new} "
                   f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s); "
-                  f"steps={sched.steps} prefills={sched.prefills}; "
-                  f"sample: {results['req0'][:16]}")
+                  f"steps={sched.steps} prefills={sched.prefills} "
+                  f"retries={sched.retries}; outcomes={by_status}; "
+                  f"sample: "
+                  f"{results[ok_uid][:16] if ok_uid else '(none ok)'}")
+            if args.chaos is not None and injector is not None:
+                print(f"[serve] chaos(seed={args.chaos}): "
+                      f"{injector.fired} faults fired; log={injector.log}")
             return 0
         t0 = time.time()
         toks = generate(sb, params, prompt, args.gen_len,

@@ -11,7 +11,11 @@ Responsibilities (DESIGN §5 "1000+-node posture"):
 * **Step retry** — transient failures (injected in tests via
   ``failure_hook``; on real fleets: ICI timeouts, host OOM) retry the
   same step up to ``max_retries`` times. The data pipeline is stateless
-  so a retried step re-reads the identical batch.
+  so a retried step re-reads the identical batch, and because
+  ``train_step`` donates its state buffers, retries rebuild the state
+  from an undonated host-side copy taken before the attempt
+  (``undonated_retry_copy``) — never from buffers a failed attempt may
+  have invalidated.
 * **Straggler monitor** — per-step wall time EMA; steps slower than
   ``straggler_factor``× the EMA are logged with their step index. On a
   real fleet this feeds the scheduler's hot-spare swap; here it is a
@@ -32,6 +36,7 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import manifest as ckpt
@@ -48,6 +53,13 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     ema_alpha: float = 0.1
     log_every: int = 10
+    # train_step is jit'd with donated state: a step that fails *after*
+    # the call consumed its buffers leaves `state` invalidated, so a
+    # naive retry replays the step on dead arrays. When retries are
+    # enabled this keeps an undonated host-side copy of the state and
+    # rebuilds from it on retry (cost: one host transfer per step —
+    # disable for max-throughput runs that accept retry-unsafety).
+    undonated_retry_copy: bool = True
 
 
 class StragglerMonitor:
@@ -153,8 +165,16 @@ class Trainer:
 
     def _step_with_retry(self, step: int, state: Any, batch: Any):
         last_err: Optional[BaseException] = None
+        backup = None
+        if self.cfg.max_retries > 0 and self.cfg.undonated_retry_copy:
+            # donated-buffer hazard: keep a host-side reference so a
+            # retry never reuses buffers a failed attempt invalidated
+            backup = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), state)
         for attempt in range(self.cfg.max_retries + 1):
             try:
+                if attempt > 0 and backup is not None:
+                    state = jax.tree.map(jnp.asarray, backup)
                 if self.failure_hook is not None:
                     self.failure_hook(step, attempt)
                 t0 = time.perf_counter()

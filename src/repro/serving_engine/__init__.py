@@ -1,15 +1,27 @@
-"""Continuous-batching TNN serving engine (PR 5).
+"""Continuous-batching TNN serving engine (PR 5) + fault tolerance (PR 6).
 
 Slot-based decode state + prefill→insert→generate loop over the ragged
 (per-slot cur_len) decode path of models/serving.py — see state.py /
-engine.py / scheduler.py and README "Serving engine".
+engine.py / scheduler.py and README "Serving engine". PR 6 adds the
+serving supervisor: request-level error isolation with retry/backoff,
+deadlines + bounded-queue backpressure, a non-finite guard with slot
+quarantine, engine snapshot/restore for preemption, and a deterministic
+FaultInjector chaos harness (faults.py / snapshot.py, README "Fault
+tolerance").
 """
 from repro.serving_engine.engine import Engine, default_slots
-from repro.serving_engine.scheduler import Request, Scheduler
+from repro.serving_engine.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serving_engine.scheduler import (EngineStepError, Outcome,
+                                            QueueFull, Request, Scheduler)
+from repro.serving_engine.snapshot import load_snapshot, save_snapshot
 from repro.serving_engine.state import (DecodeState, init_decode_state,
-                                        insert, insert_prefix_cache, release)
+                                        insert, insert_prefix_cache, poison,
+                                        release)
 
 __all__ = [
-    "Engine", "default_slots", "Request", "Scheduler", "DecodeState",
-    "init_decode_state", "insert", "insert_prefix_cache", "release",
+    "Engine", "default_slots", "Request", "Scheduler", "Outcome",
+    "QueueFull", "EngineStepError", "FaultInjector", "FaultSpec",
+    "InjectedFault", "load_snapshot", "save_snapshot", "DecodeState",
+    "init_decode_state", "insert", "insert_prefix_cache", "poison",
+    "release",
 ]

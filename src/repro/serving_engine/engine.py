@@ -17,7 +17,14 @@ The device-side half of the serving engine (the host-side queue lives in
   rows (in-flight requests keep decoding across inserts).
 * ``generate(state)`` — ONE batched masked decode_step over all S slots
   at their per-slot positions; advances only active slots, greedy-picks
-  each slot's next token.
+  each slot's next token. With the (default-on) non-finite guard it also
+  returns a per-slot ``ok`` mask and **quarantines** bad slots at the
+  device level: a slot whose logits went non-finite (SDC, a poisoned
+  request, an overflowed bf16 path) is frozen — its position/token do
+  not advance and its active bit drops — so garbage is never fed back,
+  and the host scheduler records an error outcome and recycles the slot
+  (the next insert overwrites the whole row). Mirrors the trainer's NaN
+  guard on the serving side.
 
 jit-stability contract: at fixed S, the decode loop never retraces
 across steps, inserts, or evictions — positions/slot indices/tokens are
@@ -56,7 +63,8 @@ class Engine:
     contract against solo decode is token-exactness."""
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int | None = None,
-                 max_len: int = 256, ctx: Ctx | None = None, dtype=None):
+                 max_len: int = 256, ctx: Ctx | None = None, dtype=None,
+                 guard_nonfinite: bool = True):
         if cfg.kind != "decoder":
             raise NotImplementedError(
                 f"serving engine supports decoder archs, got {cfg.kind}")
@@ -68,6 +76,7 @@ class Engine:
             # empty batch instead of ever draining the queue
             raise ValueError(f"slots={self.slots} must be >= 1")
         self.max_len = int(max_len)
+        self.guard_nonfinite = bool(guard_nonfinite)
         self.ctx = ctx or Ctx(decode=True)
         self.dtype = dtype
         # one reusable batch-1 prefix template: constants (stream kernel
@@ -120,14 +129,23 @@ class Engine:
         logits, cache = serving.decode_step(
             params, self.cfg, self.ctx, {"tokens": toks}, state.cache, cur)
         nxt = self._pick(logits)
+        if self.guard_nonfinite:
+            # parked slots decode scratch rows (possibly a quarantined
+            # slot's NaN remnants) — only active slots can be flagged
+            row_ok = jnp.all(jnp.isfinite(logits[:, -1]), axis=-1)
+            ok = jnp.where(state.active, row_ok, True)
+        else:
+            ok = jnp.ones((state.slots,), bool)
+        # quarantine: a flagged slot neither advances nor stays active,
+        # so its garbage token is never fed back on the next step
+        advance = state.active & ok
         new_state = st.DecodeState(
             cache=cache,
-            cur_len=jnp.where(state.active, state.cur_len + 1,
-                              state.cur_len),
-            tokens=jnp.where(state.active, nxt, state.tokens),
-            active=state.active,
+            cur_len=jnp.where(advance, state.cur_len + 1, state.cur_len),
+            tokens=jnp.where(advance, nxt, state.tokens),
+            active=advance,
         )
-        return new_state, nxt
+        return new_state, nxt, ok
 
     # -------------------------------------------------------------- public
     def init_state(self) -> st.DecodeState:
@@ -171,9 +189,18 @@ class Engine:
                             jnp.int32(plen), jnp.asarray(token, jnp.int32))
 
     def generate(self, state):
-        """One batched decode step: (state, tokens (S,)) — read tokens
-        only for slots that were active going in."""
+        """One batched decode step: (state, tokens (S,), ok (S,)) — read
+        tokens only for slots that were active going in AND finite
+        (``ok``). A slot with ``ok=False`` has been quarantined in the
+        returned state (frozen + deactivated); the caller must record
+        the failure and release/recycle it."""
         return self._generate(self.params, state)
 
     def release(self, state, slot: int):
         return st.release(state, slot)
+
+    def poison_slot(self, state, slot: int):
+        """Chaos hook: overwrite ``slot``'s per-slot float cache rows with
+        NaN so the next decode step trips the non-finite guard for that
+        slot only — exercises the real quarantine path end to end."""
+        return st.poison(state, slot)

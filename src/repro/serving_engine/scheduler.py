@@ -1,39 +1,81 @@
-"""Host-side scheduler: request queue, slot admission, token streaming.
+"""Host-side supervised scheduler: queue, admission, isolation, deadlines.
 
 Drives an :class:`~repro.serving_engine.engine.Engine` with the classic
 continuous-batching loop (MaxText/JetStream offline_inference shape):
 
     while work:
+        watchdog: evict expired slots, drop expired queued requests
         if free slot and queued request:   # greedy prefill-first
             prefix, first, p = engine.prefill(request)   # C-block chunked
             state = engine.insert(state, prefix, p, first, slot)
         else:
-            state, tokens = engine.generate(state)       # all slots, 1 step
-        stream tokens to per-request callbacks; evict EOS/max-len slots,
-        recycle them for the queue
+            state, tokens, ok = engine.generate(state)   # all slots, 1 step
+        stream tokens to per-request callbacks; evict EOS/max-len/
+        non-finite slots, recycle them for the queue
 
-Admission is *greedy prefill-first*: whenever a slot is free and a
-request is queued, the scheduler prefills and inserts before taking the
-next decode step, so the batch refills as soon as capacity exists —
-decode steps then amortise the model over every live request. Eviction
-is immediate: a slot is released the step its request finishes (EOS hit
-or ``max_new`` tokens emitted), and the freed slot admits the next
-queued request on the following loop iteration.
+PR 6 makes the loop a *supervisor* (the serving twin of the trainer's
+1000-node posture): one bad request can no longer take down the other
+S - 1 in-flight generations.
 
-The per-step host sync (one (S,) token transfer) is what streams tokens
-to callbacks; a production deployment would move detokenisation to a
-separate thread against an async transfer (the MaxText detokenize-thread
-pattern) — on CPU the sync is noise next to the model step.
+* **Request isolation** — a prefill/insert/emit failure fails only that
+  request: its :class:`Outcome` records ``status="error"`` with the
+  message, the slot goes back to the free list, the loop continues.
+  Transient errors (``RuntimeError``, which includes XLA runtime errors
+  and :class:`~repro.serving_engine.faults.InjectedFault`) are retried
+  with exponential backoff up to ``max_retries``; a raising ``on_token``
+  callback is **detached** (never unwinds the loop) and noted on the
+  outcome.
+* **Non-finite guard** — ``engine.generate`` quarantines slots whose
+  logits went non-finite; the scheduler records an error outcome and
+  recycles the slot instead of streaming garbage.
+* **Deadlines** — per-request TTL (``Request.deadline`` seconds, or the
+  scheduler's ``default_deadline``); a step-loop watchdog evicts expired
+  slots and drops expired queued requests with ``status="expired"``.
+* **Backpressure** — ``queue_cap`` bounds the queue; ``admission``
+  policy is ``"reject"`` (raise :class:`QueueFull`) or ``"block"``
+  (``submit`` waits until ``run`` — in another thread — drains a spot).
+* **Preemption + snapshot/restore** — SIGTERM/SIGINT (same handler
+  shape as ``runtime.Trainer``) finishes the current step, writes a
+  final snapshot (``snapshot_dir``) and returns; a new process calls
+  :meth:`try_restore` and ``run()`` resumes with token-exact
+  continuation. Periodic snapshots every ``snapshot_every`` decode
+  steps; a *failing* snapshot write is counted and logged, never fatal.
+* **Fault injection** — an optional
+  :class:`~repro.serving_engine.faults.FaultInjector` fires at the
+  prefill / decode / callback / snapshot boundaries so every failure
+  mode above is CI-exercised deterministically.
+
+``run()`` still returns ``({uid: [tokens]}, state)``; per-request status
+lives in ``scheduler.outcomes`` (``Outcome.tokens`` aliases the same
+list as ``results[uid]``).
 """
 from __future__ import annotations
 
 import dataclasses
+import signal
+import threading
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.serving_engine.engine import Engine
+
+#: terminal request states; anything else is pending/in-flight
+TERMINAL = ("ok", "error", "expired")
+
+
+class QueueFull(RuntimeError):
+    """submit() under admission="reject" with a full bounded queue."""
+
+
+class EngineStepError(RuntimeError):
+    """The batched decode step failed persistently (retries exhausted).
+
+    In-flight requests have been failed with explicit error outcomes and
+    their slots released; the *queue is left intact*, so a fresh
+    ``run()`` (new engine state) serves the remaining requests."""
 
 
 @dataclasses.dataclass
@@ -43,20 +85,75 @@ class Request:
     max_new: int                  # generation budget (tokens)
     eos_id: Optional[int] = None  # stop token (None = run to max_new)
     on_token: Optional[Callable[[str, int], None]] = None  # streaming cb
+    deadline: Optional[float] = None  # TTL seconds from submit (None = ∞)
+
+
+@dataclasses.dataclass
+class Outcome:
+    """Per-request terminal record. ``tokens`` aliases ``results[uid]``."""
+    uid: str
+    status: str = "pending"             # pending | ok | error | expired
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None         # set when status in {error}
+    callback_error: Optional[str] = None  # callback detached mid-stream
+
+
+def _errmsg(e: BaseException) -> str:
+    return f"{type(e).__name__}: {e}"
 
 
 class Scheduler:
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, *,
+                 queue_cap: Optional[int] = None,
+                 admission: str = "reject",
+                 default_deadline: Optional[float] = None,
+                 max_retries: int = 2,
+                 backoff_base: float = 0.05,
+                 injector=None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 log: Optional[Callable[[str], None]] = None):
+        if admission not in ("reject", "block"):
+            raise ValueError(f"admission={admission!r}: "
+                             "expected 'reject' or 'block'")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap={queue_cap} must be >= 1")
         self.engine = engine
         self.queue: deque = deque()
+        self.queue_cap = queue_cap
+        self.admission = admission
+        self.default_deadline = default_deadline
+        self.max_retries = int(max_retries)
+        self.backoff_base = float(backoff_base)
+        self.injector = injector
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        self.clock = clock
+        self.sleep = sleep
+        self.log = log or (lambda msg: None)
         self.results: Dict[str, List[int]] = {}
+        self.outcomes: Dict[str, Outcome] = {}
+        self._deadlines: Dict[str, float] = {}   # uid -> absolute clock()
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
         self.steps = 0                # decode steps taken (stats)
         self.prefills = 0
+        self.retries = 0              # transient-fault retries performed
+        self.evictions = 0            # deadline/non-finite evictions
+        self.snapshot_errors = 0
+        self.preempted = False
+        self._resume = None           # set by try_restore()
 
-    def submit(self, req: Request) -> None:
-        """Queue a request; rejects loudly when prompt + generation could
+    # ----------------------------------------------------------- admission
+    def submit(self, req: Request, *, timeout: Optional[float] = None) -> None:
+        """Queue a request. Rejects loudly when prompt + generation could
         not fit a slot (an over-capacity run would clamp cache writes and
-        corrupt the slot's ring/KV rows mid-generation)."""
+        corrupt the slot's ring/KV rows mid-generation). With a bounded
+        queue, ``admission="reject"`` raises :class:`QueueFull` when
+        full; ``"block"`` waits until ``run()`` (in another thread)
+        drains a spot (or ``timeout`` seconds elapse — then QueueFull)."""
         p = int(np.asarray(req.prompt).shape[-1])
         if req.max_new < 1:
             raise ValueError(f"request {req.uid}: max_new must be >= 1")
@@ -69,54 +166,337 @@ class Scheduler:
                 f"exceeds slot capacity {cap} "
                 f"(Engine(max_len={self.engine.max_len}))")
         if req.uid in self.results:
-            # a reused uid would merge token lists and trip the budget
-            # check early, silently truncating the later request
+            # a reused uid — including one from an already-completed run —
+            # would merge token lists and trip the budget check early,
+            # silently truncating the later request
             raise ValueError(f"request uid {req.uid!r} already submitted")
-        self.queue.append(req)
-        self.results[req.uid] = []
+        with self._not_full:
+            if self.queue_cap is not None:
+                if self.admission == "reject":
+                    if len(self.queue) >= self.queue_cap:
+                        raise QueueFull(
+                            f"request {req.uid}: queue at capacity "
+                            f"{self.queue_cap} (admission='reject')")
+                else:                                   # block
+                    deadline = (None if timeout is None
+                                else self.clock() + timeout)
+                    while len(self.queue) >= self.queue_cap:
+                        remaining = (None if deadline is None
+                                     else deadline - self.clock())
+                        if remaining is not None and remaining <= 0:
+                            raise QueueFull(
+                                f"request {req.uid}: queue still full "
+                                f"after {timeout}s (admission='block')")
+                        self._not_full.wait(remaining)
+            self.queue.append(req)
+            self.results[req.uid] = []
+            self.outcomes[req.uid] = Outcome(uid=req.uid,
+                                             tokens=self.results[req.uid])
+            ttl = (req.deadline if req.deadline is not None
+                   else self.default_deadline)
+            if ttl is not None:
+                self._deadlines[req.uid] = self.clock() + float(ttl)
 
-    # ------------------------------------------------------------ internals
+    def _pop_request(self) -> Optional[Request]:
+        with self._not_full:
+            if not self.queue:
+                return None
+            req = self.queue.popleft()
+            self._not_full.notify()
+            return req
+
+    # ------------------------------------------------------------ signals
+    def _install_signals(self):
+        self._old_handlers = {}
+        if threading.current_thread() is not threading.main_thread():
+            return                         # signals only land on main
+
+        def handler(signum, frame):
+            self.preempted = True
+            self.log(f"[scheduler] signal {signum}: "
+                     "snapshot-and-exit requested")
+        for s in (signal.SIGTERM, signal.SIGINT):
+            self._old_handlers[s] = signal.signal(s, handler)
+
+    def _restore_signals(self):
+        for s, h in getattr(self, "_old_handlers", {}).items():
+            signal.signal(s, h)
+
+    def preempt(self):
+        """Programmatic preemption: finish the current step, snapshot
+        (when configured), return from ``run``."""
+        self.preempted = True
+
+    # ----------------------------------------------------------- outcomes
+    def _finish(self, uid: str, status: str, error: Optional[str] = None):
+        out = self.outcomes[uid]
+        out.status = status
+        if error is not None:
+            out.error = error
+        self._deadlines.pop(uid, None)
+        if status != "ok":
+            self.log(f"[scheduler] request {uid}: {status}"
+                     + (f" ({error})" if error else ""))
+
     def _emit(self, req: Request, token: int) -> bool:
         """Record/stream one token; returns True when the request is done
-        (EOS or budget exhausted)."""
+        (EOS or budget exhausted). A raising callback (or an injected
+        callback fault) is detached and noted — never unwinds the loop."""
         self.results[req.uid].append(token)
         if req.on_token is not None:
-            req.on_token(req.uid, token)
+            try:
+                if self.injector is not None:
+                    self.injector.callback(req.uid)
+                req.on_token(req.uid, token)
+            except Exception as e:      # noqa: BLE001 — isolation boundary
+                req.on_token = None
+                self.outcomes[req.uid].callback_error = _errmsg(e)
+                self.log(f"[scheduler] request {req.uid}: on_token raised, "
+                         f"callback detached ({_errmsg(e)})")
         done = len(self.results[req.uid]) >= req.max_new
         if req.eos_id is not None and token == req.eos_id:
             done = True
         return done
 
+    # ----------------------------------------------------------- watchdog
+    def _expire_queue(self, now: float):
+        """Drop queued requests whose deadline passed before admission."""
+        with self._not_full:
+            if not self._deadlines:
+                return
+            keep = deque()
+            for req in self.queue:
+                dl = self._deadlines.get(req.uid)
+                if dl is not None and now > dl:
+                    self._finish(req.uid, "expired",
+                                 "deadline exceeded while queued")
+                    self.evictions += 1
+                    self._not_full.notify()
+                else:
+                    keep.append(req)
+            self.queue = keep
+
+    def _expire_slots(self, now: float, state, slot_req: Dict[int, Request],
+                      free: List[int]):
+        for slot in sorted(slot_req):
+            req = slot_req[slot]
+            dl = self._deadlines.get(req.uid)
+            if dl is not None and now > dl:
+                self._finish(
+                    req.uid, "expired",
+                    f"deadline exceeded after "
+                    f"{len(self.results[req.uid])} tokens")
+                self.evictions += 1
+                state = self.engine.release(state, slot)
+                del slot_req[slot]
+                free.append(slot)
+        return state
+
+    # ------------------------------------------------------------ retries
+    def _backoff(self, attempt: int):
+        self.retries += 1
+        if self.backoff_base > 0:
+            self.sleep(self.backoff_base * (2 ** attempt))
+
+    def _prefill_with_retry(self, req: Request):
+        """Transient (RuntimeError-family) prefill failures retry with
+        exponential backoff; anything else — and retry exhaustion —
+        propagates to the caller's isolation boundary."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self.injector is not None:
+                    self.injector.prefill(req.uid)
+                return self.engine.prefill(req.prompt)
+            except RuntimeError as e:
+                if attempt >= self.max_retries:
+                    raise
+                self.log(f"[scheduler] prefill {req.uid} attempt {attempt} "
+                         f"failed ({_errmsg(e)}); retrying")
+                self._backoff(attempt)
+
+    def _admit(self, req: Request, state, slot_req: Dict[int, Request],
+               free: List[int]):
+        """Prefill + insert one request; failures fail only this request
+        (error outcome, slot back on the free list)."""
+        slot = free.pop()
+        try:
+            prefix, first, plen = self._prefill_with_retry(req)
+        except Exception as e:          # noqa: BLE001 — isolation boundary
+            self._finish(req.uid, "error", f"prefill failed: {_errmsg(e)}")
+            free.append(slot)
+            return state
+        self.prefills += 1
+        tok = int(first)
+        if self._emit(req, tok):        # 1-token request: done
+            self._finish(req.uid, "ok")
+            free.append(slot)
+            return state
+        try:
+            state = self.engine.insert(state, prefix, plen, tok, slot)
+        except Exception as e:          # noqa: BLE001 — isolation boundary
+            self._finish(req.uid, "error", f"insert failed: {_errmsg(e)}")
+            free.append(slot)
+            return state
+        slot_req[slot] = req
+        return state
+
+    def _generate_with_retry(self, state, slot_req: Dict[int, Request],
+                             free: List[int]):
+        """One batched decode step with transient-fault retry. The engine
+        step is pure (no donation), so a failed call leaves ``state``
+        intact and the retry replays the identical step. On exhaustion
+        every in-flight request gets an explicit error outcome, slots are
+        released, the queue is left intact, and EngineStepError raises —
+        a fresh run() serves the remainder."""
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self.injector is not None:
+                    bad = self.injector.decode(self.steps)
+                    if bad is not None:
+                        state = self.engine.poison_slot(state, bad)
+                return self.engine.generate(state)
+            except RuntimeError as e:
+                last_err = e
+                if attempt >= self.max_retries:
+                    break
+                self.log(f"[scheduler] decode step {self.steps} attempt "
+                         f"{attempt} failed ({_errmsg(e)}); retrying")
+                self._backoff(attempt)
+        for slot in sorted(slot_req):
+            req = slot_req[slot]
+            self._finish(req.uid, "error",
+                         f"engine step failed: {_errmsg(last_err)}")
+            state = self.engine.release(state, slot)
+            free.append(slot)
+        slot_req.clear()
+        raise EngineStepError(
+            f"decode step {self.steps} failed after "
+            f"{self.max_retries + 1} attempts") from last_err
+
+    # ----------------------------------------------------------- snapshot
+    def _snapshot(self, state, slot_req: Dict[int, Request],
+                  free: List[int], *, final: bool = False):
+        """Best-effort: a failing snapshot write is counted and logged,
+        never fatal to serving (the previous committed snapshot stays
+        valid — manifest saves are atomic)."""
+        if self.snapshot_dir is None:
+            return
+        from repro.serving_engine import snapshot as snap
+        try:
+            if self.injector is not None:
+                self.injector.snapshot(self.steps)
+            snap.save_snapshot(self.snapshot_dir, self, state, slot_req,
+                               free)
+        except Exception as e:          # noqa: BLE001 — isolation boundary
+            self.snapshot_errors += 1
+            self.log(f"[scheduler] snapshot"
+                     f"{' (final)' if final else ''} failed: {_errmsg(e)}")
+
+    def try_restore(self, *, callbacks: Optional[Dict] = None) -> bool:
+        """Load the latest committed snapshot from ``snapshot_dir`` into
+        this (fresh) scheduler; the next ``run()`` resumes token-exact.
+        ``callbacks`` re-attaches ``on_token`` closures by uid (they
+        cannot be serialized). Returns False when there is no snapshot."""
+        from repro.serving_engine import snapshot as snap
+        if self.snapshot_dir is None:
+            return False
+        loaded = snap.load_snapshot(self.snapshot_dir, self.engine)
+        if loaded is None:
+            return False
+        extra = loaded["extra"]
+        self.steps = int(extra["steps"])
+        self.prefills = int(extra["prefills"])
+        self.results = {uid: [int(t) for t in toks]
+                        for uid, toks in extra["results"].items()}
+        self.outcomes = {}
+        for uid, o in extra["outcomes"].items():
+            self.outcomes[uid] = Outcome(
+                uid=uid, status=o["status"],
+                tokens=self.results.setdefault(uid, []),
+                error=o["error"], callback_error=o["callback_error"])
+        now = self.clock()
+        self._deadlines = {uid: now + float(rem)
+                           for uid, rem in extra["deadline_remaining"].items()}
+        with self._not_full:
+            self.queue = deque(snap.meta_request(m, callbacks)
+                               for m in extra["queue"])
+        slot_req = {int(slot): snap.meta_request(m, callbacks)
+                    for slot, m in extra["slot_req"]}
+        self._resume = {
+            "state": loaded["state"],
+            "slot_req": slot_req,
+            "free": [int(s) for s in extra["free"]],
+        }
+        self.log(f"[scheduler] restored snapshot at step {self.steps}: "
+                 f"{len(slot_req)} in-flight, {len(self.queue)} queued")
+        return True
+
     # --------------------------------------------------------------- run
     def run(self, state=None):
         """Drain the queue; returns ({uid: [generated tokens]}, state).
-        Reentrant: pass the returned state back in to keep serving."""
+        Reentrant: pass the returned state back in to keep serving. When
+        preempted (SIGTERM/SIGINT or :meth:`preempt`) it snapshots and
+        returns early with ``self.preempted`` set."""
         eng = self.engine
-        if state is None:
-            state = eng.init_state()
-        free = list(range(eng.slots))[::-1]     # pop() admits slot 0 first
-        slot_req: Dict[int, Request] = {}
-
-        while self.queue or slot_req:
-            if self.queue and free:             # greedy prefill-first
-                req = self.queue.popleft()
-                slot = free.pop()
-                prefix, first, plen = eng.prefill(req.prompt)
-                self.prefills += 1
-                tok = int(first)
-                if self._emit(req, tok):        # 1-token request: done
-                    free.append(slot)
-                    continue
-                state = eng.insert(state, prefix, plen, tok, slot)
-                slot_req[slot] = req
-                continue
-            state, toks = eng.generate(state)
-            self.steps += 1
-            toks_h = np.asarray(toks)           # host sync: stream point
-            for slot in sorted(slot_req):
-                req = slot_req[slot]
-                if self._emit(req, int(toks_h[slot])):
-                    state = eng.release(state, slot)
-                    del slot_req[slot]
-                    free.append(slot)
+        resume, self._resume = self._resume, None
+        if resume is not None:
+            if state is None:
+                state = resume["state"]
+            free = resume["free"]
+            slot_req = resume["slot_req"]
+        else:
+            if state is None:
+                state = eng.init_state()
+            free = list(range(eng.slots))[::-1]  # pop() admits slot 0 first
+            slot_req = {}
+        self.preempted = False
+        self._install_signals()
+        try:
+            while True:
+                with self._lock:
+                    has_queue = bool(self.queue)
+                if self.preempted or not (has_queue or slot_req):
+                    break
+                now = self.clock()
+                self._expire_queue(now)              # watchdog: queue TTLs
+                state = self._expire_slots(now, state, slot_req, free)
+                if free:                             # greedy prefill-first
+                    req = self._pop_request()
+                    if req is not None:
+                        state = self._admit(req, state, slot_req, free)
+                        continue
+                if not slot_req:
+                    continue     # everything expired/errored; re-check queue
+                state, toks, ok = self._generate_with_retry(state, slot_req,
+                                                            free)
+                self.steps += 1
+                toks_h = np.asarray(toks)   # host sync: stream point
+                ok_h = np.asarray(ok)
+                for slot in sorted(slot_req):
+                    req = slot_req[slot]
+                    if not ok_h[slot]:
+                        # quarantined on device; recycle the slot
+                        self._finish(
+                            req.uid, "error",
+                            f"non-finite logits at step {self.steps - 1} "
+                            f"(slot {slot} quarantined after "
+                            f"{len(self.results[req.uid])} tokens)")
+                        self.evictions += 1
+                        state = eng.release(state, slot)
+                        del slot_req[slot]
+                        free.append(slot)
+                        continue
+                    if self._emit(req, int(toks_h[slot])):
+                        self._finish(req.uid, "ok")
+                        state = eng.release(state, slot)
+                        del slot_req[slot]
+                        free.append(slot)
+                if (self.snapshot_every and not self.preempted
+                        and self.steps % self.snapshot_every == 0):
+                    self._snapshot(state, slot_req, free)
+            if self.preempted:
+                self._snapshot(state, slot_req, free, final=True)
+        finally:
+            self._restore_signals()
         return self.results, state

@@ -1,0 +1,120 @@
+"""Engine snapshot/restore: preemptible serving (ISSUE 6 tentpole §4).
+
+Serializes the full serving state through :mod:`repro.checkpoint.manifest`
+(same atomic COMMITTED-marker layout as training checkpoints), so a
+preempted server resumes mid-generation with **token-exact**
+continuation:
+
+* the device side — the :class:`~repro.serving_engine.state.DecodeState`
+  pytree (every slot's cache rows, per-slot positions/tokens/active
+  mask) is the manifest's array tree;
+* the host side — scheduler bookkeeping (slot→request map, pending
+  queue, per-request emitted tokens, outcomes, free-slot order, step
+  counters, remaining deadline budgets) rides in the manifest's JSON
+  ``extra``.
+
+Greedy decode is deterministic and per-slot independent (the engine's
+parity contract), so restoring cache + positions + bookkeeping and
+rerunning the loop reproduces exactly the tokens an uninterrupted run
+would have produced — CI-verified by the chaos-smoke gate.
+
+``on_token`` callbacks are host closures and cannot be serialized;
+:meth:`Scheduler.try_restore` re-attaches them from a ``callbacks``
+mapping keyed by uid.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint import manifest
+
+SNAPSHOT_KIND = "serving-engine-snapshot"
+
+
+def request_meta(req) -> Dict[str, Any]:
+    return {
+        "uid": req.uid,
+        "prompt": np.asarray(req.prompt).astype(np.int64).tolist(),
+        "max_new": int(req.max_new),
+        "eos_id": None if req.eos_id is None else int(req.eos_id),
+    }
+
+
+def meta_request(meta: Dict[str, Any], callbacks: Optional[Dict] = None):
+    from repro.serving_engine.scheduler import Request
+    uid = meta["uid"]
+    return Request(
+        uid=uid,
+        prompt=np.asarray(meta["prompt"], np.int32),
+        max_new=int(meta["max_new"]),
+        eos_id=meta["eos_id"],
+        on_token=(callbacks or {}).get(uid),
+    )
+
+
+def save_snapshot(snapshot_dir: str, sched, state, slot_req: Dict,
+                  free) -> str:
+    """Write one committed snapshot (manifest step = scheduler decode
+    steps taken). Returns the step directory path."""
+    now = sched.clock()
+    extra = {
+        "kind": SNAPSHOT_KIND,
+        "slots": sched.engine.slots,
+        "max_len": sched.engine.max_len,
+        "steps": sched.steps,
+        "prefills": sched.prefills,
+        "slot_req": [[int(slot), request_meta(req)]
+                     for slot, req in sorted(slot_req.items())],
+        "queue": [request_meta(r) for r in list(sched.queue)],
+        "free": [int(s) for s in free],
+        "results": {uid: [int(t) for t in toks]
+                    for uid, toks in sched.results.items()},
+        "outcomes": {uid: {"status": o.status, "error": o.error,
+                           "callback_error": o.callback_error}
+                     for uid, o in sched.outcomes.items()},
+        # deadlines are wall-clock budgets: persist the *remaining* time
+        # and re-arm on restore (a preempted second does not count)
+        "deadline_remaining": {uid: float(dl - now)
+                               for uid, dl in sched._deadlines.items()},
+    }
+    return manifest.save(snapshot_dir, sched.steps, state, extra=extra)
+
+
+def load_snapshot(snapshot_dir: str, engine, *,
+                  step: Optional[int] = None) -> Optional[Dict[str, Any]]:
+    """Returns {"state": DecodeState, "extra": dict} from the latest (or
+    given) committed snapshot, or None when the directory holds none.
+    Raises ValueError when the snapshot's engine geometry (slots,
+    max_len) does not match ``engine`` — a mismatched resume would decode
+    from misaligned cache rows, silently wrong."""
+    if step is None:
+        step = manifest.latest_step(snapshot_dir)
+        if step is None:
+            return None
+    # validate kind/geometry from the manifest JSON *before* restoring the
+    # array tree: a mismatched engine would otherwise surface as an opaque
+    # per-leaf shape error instead of naming the geometry drift
+    step_dir = os.path.join(snapshot_dir, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        extra = json.load(f).get("extra", {})
+    if extra.get("kind") != SNAPSHOT_KIND:
+        raise ValueError(
+            f"{snapshot_dir} step {step} is not a serving-engine snapshot "
+            f"(kind={extra.get('kind')!r})")
+    if (int(extra["slots"]) != engine.slots
+            or int(extra["max_len"]) != engine.max_len):
+        raise ValueError(
+            f"snapshot geometry (slots={extra['slots']}, "
+            f"max_len={extra['max_len']}) does not match engine "
+            f"(slots={engine.slots}, max_len={engine.max_len})")
+    state, extra = manifest.restore(snapshot_dir, engine.init_state(),
+                                    step=step)
+    return {"state": state, "extra": extra}
+
+
+__all__ = ["SNAPSHOT_KIND", "save_snapshot", "load_snapshot",
+           "request_meta", "meta_request"]

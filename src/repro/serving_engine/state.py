@@ -130,3 +130,30 @@ def release(state: DecodeState, slot: int) -> DecodeState:
     cache row becomes scratch until the next insert recycles it."""
     return dataclasses.replace(state,
                                active=state.active.at[slot].set(False))
+
+
+def poison(state: DecodeState, slot) -> DecodeState:
+    """Fault-injection hook: overwrite ``slot``'s per-slot floating-point
+    cache rows with NaN. The next decode step produces non-finite logits
+    for that row only (per-slot leaves are row-independent — the same
+    isolation property ``insert`` relies on), which the engine's
+    non-finite guard must catch and quarantine. Shared parameter-derived
+    leaves and integer leaves are untouched."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def f(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1] if names else ""
+        off = BATCH_AXIS_FROM_END.get(name)
+        if off is None or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        ax = leaf.ndim - off
+        row_shape = tuple(1 if i == ax else s
+                          for i, s in enumerate(leaf.shape))
+        starts = [jnp.int32(0)] * leaf.ndim
+        starts[ax] = slot
+        return jax.lax.dynamic_update_slice(
+            leaf, jnp.full(row_shape, jnp.nan, leaf.dtype), tuple(starts))
+
+    return dataclasses.replace(
+        state, cache=jax.tree_util.tree_map_with_path(f, state.cache))

@@ -1,0 +1,397 @@
+"""Serving fault tolerance (repro.serving_engine, ISSUE 6).
+
+Contracts under test:
+* isolation — a prefill fault, a raising ``on_token`` callback, or a
+  NaN-poisoned slot fails only that request (explicit error outcome,
+  slot recycled); every other request's token stream is bit-exact vs the
+  fault-free baseline, and a full second wave serves after the faults
+  (no slot leaks);
+* retries — transient (RuntimeError-family) prefill/decode faults are
+  retried with backoff and leave token streams exact;
+* persistent decode failure — in-flight requests get error outcomes,
+  the queue survives, and a fresh ``run()`` serves the remainder
+  (re-entrancy: nothing half-consumed);
+* deadlines/backpressure — the watchdog evicts expired slots and drops
+  expired queued requests; a bounded queue rejects (QueueFull) or
+  blocks until drained;
+* snapshot/restore — a preempted run resumes token-exact; a failing
+  snapshot write never takes serving down; geometry mismatches raise;
+* determinism — the seeded FaultInjector reproduces its schedule.
+"""
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.transformer import init_model
+from repro.nn.params import unbox
+from repro.serving_engine import (Engine, EngineStepError, FaultInjector,
+                                  FaultSpec, InjectedFault, QueueFull,
+                                  Request, Scheduler)
+
+PLENS = [3, 6, 5, 2]
+GENS = [8, 9, 10, 8]
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def env():
+    """Shared smoke config/params/engine (stream block C=4 so boundary
+    refreshes happen inside every test) + the fault-free baseline."""
+    old = os.environ.get("REPRO_FD_STREAM_C")
+    os.environ["REPRO_FD_STREAM_C"] = "4"
+    try:
+        cfg = reduce_for_smoke(get_config("fd-tnn-lm-wt103"),
+                               dtype="float32", param_dtype="float32")
+        params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+        eng = Engine(cfg, params, slots=2, max_len=MAX_LEN)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
+                   for p in PLENS]
+        sched = Scheduler(eng)
+        for r in _fleet(prompts):
+            sched.submit(r)
+        baseline, _ = sched.run()
+        assert all(o.status == "ok" for o in sched.outcomes.values())
+        yield {"cfg": cfg, "params": params, "engine": eng,
+               "prompts": prompts,
+               "baseline": {u: list(t) for u, t in baseline.items()}}
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_FD_STREAM_C", None)
+        else:
+            os.environ["REPRO_FD_STREAM_C"] = old
+
+
+def _fleet(prompts, uid_prefix="r", gens=GENS, **kw):
+    return [Request(uid=f"{uid_prefix}{i}", prompt=pr, max_new=g, **kw)
+            for i, (pr, g) in enumerate(zip(prompts, gens))]
+
+
+def _run(env, injector=None, reqs=None, **sched_kw):
+    sched = Scheduler(env["engine"], injector=injector, backoff_base=0.0,
+                      **sched_kw)
+    for r in (reqs if reqs is not None else _fleet(env["prompts"])):
+        sched.submit(r)
+    results, state = sched.run()
+    return sched, results, state
+
+
+# ------------------------------------------------------------- injector
+def test_injector_scripted_transient_and_persistent():
+    inj = FaultInjector(specs=[
+        FaultSpec(site="prefill", uid="a", at=0, count=1),   # transient
+        FaultSpec(site="decode", at=1, count=99),            # persistent
+    ])
+    with pytest.raises(InjectedFault):
+        inj.prefill("a")
+    inj.prefill("a")                       # second visit passes (count=1)
+    inj.prefill("b")                       # other uid never matches
+    assert inj.decode(0) is None
+    for step in (1, 2, 3):
+        with pytest.raises(InjectedFault):
+            inj.decode(step)
+    assert inj.fired == 4 and len(inj.log) == 4
+
+
+def test_injector_seeded_is_deterministic():
+    def schedule():
+        inj = FaultInjector(seed=123, rates={"decode": 0.5})
+        fired = []
+        for step in range(40):
+            try:
+                inj.decode(step)
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        return fired
+    a, b = schedule(), schedule()
+    assert a == b and any(a) and not all(a)
+    with pytest.raises(ValueError, match="seed"):
+        FaultInjector(rates={"decode": 0.5})
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(site="nope")
+
+
+def test_injector_poison_requires_decode_site():
+    with pytest.raises(ValueError, match="poison_slot"):
+        FaultSpec(site="prefill", poison_slot=0)
+
+
+# ------------------------------------------------- request-level isolation
+def test_prefill_fault_fails_only_that_request(env):
+    inj = FaultInjector(specs=[FaultSpec(site="prefill", uid="r1",
+                                         count=99)])
+    sched, results, _ = _run(env, injector=inj)
+    assert sched.outcomes["r1"].status == "error"
+    assert "prefill failed" in sched.outcomes["r1"].error
+    assert results["r1"] == []
+    for u in ("r0", "r2", "r3"):
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+
+
+def test_transient_prefill_fault_is_retried(env):
+    inj = FaultInjector(specs=[FaultSpec(site="prefill", uid="r0",
+                                         count=1)])
+    sched, results, _ = _run(env, injector=inj, max_retries=2)
+    assert sched.retries >= 1
+    for u in ("r0", "r1", "r2", "r3"):
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+
+
+def test_raising_callback_is_detached_not_fatal(env):
+    calls = {"n": 0}
+
+    def bad_cb(uid, tok):
+        calls["n"] += 1
+        raise ZeroDivisionError("callback bug")
+
+    reqs = _fleet(env["prompts"])
+    reqs[1].on_token = bad_cb
+    sched, results, _ = _run(env, reqs=reqs)
+    assert calls["n"] == 1                      # detached after first raise
+    out = sched.outcomes["r1"]
+    assert out.status == "ok" and "ZeroDivisionError" in out.callback_error
+    for u in ("r0", "r1", "r2", "r3"):
+        assert results[u] == env["baseline"][u], u
+
+
+def test_nonfinite_guard_quarantines_slot_and_recycles(env):
+    # poison slot 0 on the 3rd decode step: r0 (gen 8, admitted to slot 0)
+    # is still mid-generation there
+    inj = FaultInjector(specs=[FaultSpec(site="decode", at=3,
+                                         poison_slot=0)])
+    sched, results, state = _run(env, injector=inj)
+    out = sched.outcomes["r0"]
+    assert out.status == "error" and "non-finite" in out.error
+    got = results["r0"]
+    base = env["baseline"]["r0"]
+    # tokens up to the injection are exact; garbage is never streamed
+    assert 0 < len(got) < len(base) and got == base[:len(got)]
+    for u in ("r1", "r2", "r3"):
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+    # second wave over the same state: the NaN'd slot row must have been
+    # fully overwritten by the recycling insert — no leak
+    for r in _fleet(env["prompts"], uid_prefix="w"):
+        sched.submit(r)
+    sched.injector = None
+    results2, _ = sched.run(state)
+    for i in range(4):
+        assert results2[f"w{i}"] == env["baseline"][f"r{i}"], i
+
+
+def test_transient_decode_fault_is_retried_exactly(env):
+    inj = FaultInjector(specs=[FaultSpec(site="decode", at=2, count=1)])
+    sched, results, _ = _run(env, injector=inj, max_retries=1)
+    assert sched.retries >= 1
+    for u in ("r0", "r1", "r2", "r3"):
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+
+
+def test_persistent_decode_failure_is_reentrant(env):
+    """Retry exhaustion on the batched step fails the in-flight requests
+    with explicit outcomes but leaves the queue intact: a fresh run()
+    serves the remainder exactly (nothing half-consumed)."""
+    inj = FaultInjector(specs=[FaultSpec(site="decode", at=1, count=99)])
+    sched = Scheduler(env["engine"], injector=inj, max_retries=1,
+                      backoff_base=0.0)
+    for r in _fleet(env["prompts"]):
+        sched.submit(r)
+    with pytest.raises(EngineStepError):
+        sched.run()
+    # slots=2: r0/r1 were in flight and failed; r2/r3 still queued
+    for u in ("r0", "r1"):
+        assert sched.outcomes[u].status == "error"
+        assert "engine step failed" in sched.outcomes[u].error
+    assert [r.uid for r in sched.queue] == ["r2", "r3"]
+    assert sched.outcomes["r2"].status == "pending"
+    sched.injector = None
+    results, _ = sched.run()                    # fresh state, same queue
+    for u in ("r2", "r3"):
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+
+
+def test_duplicate_uid_after_completed_run_rejected(env):
+    sched, results, state = _run(env)
+    assert sched.outcomes["r0"].status == "ok"
+    with pytest.raises(ValueError, match="already submitted"):
+        sched.submit(Request(uid="r0", prompt=env["prompts"][0],
+                             max_new=4))
+
+
+# --------------------------------------------------- deadlines/backpressure
+def test_deadline_watchdog_evicts_expired_slot(env):
+    clk = {"t": 0.0}
+
+    def tick(uid, tok):
+        clk["t"] += 2.0                         # each streamed token: +2s
+
+    reqs = _fleet(env["prompts"][:2], gens=[10, 10], on_token=tick)
+    reqs[0].deadline = 5.0                      # expires after ~3 tokens
+    sched = Scheduler(env["engine"], clock=lambda: clk["t"],
+                      backoff_base=0.0)
+    for r in reqs:
+        sched.submit(r)
+    results, _ = sched.run()
+    out = sched.outcomes["r0"]
+    assert out.status == "expired" and "deadline" in out.error
+    assert 0 < len(results["r0"]) < 10          # partial stream, then evicted
+    assert sched.evictions >= 1
+    assert sched.outcomes["r1"].status == "ok" and len(results["r1"]) == 10
+
+
+def test_deadline_drops_expired_queued_request(env):
+    clk = {"t": 0.0}
+
+    def tick(uid, tok):
+        clk["t"] += 1.0
+
+    # slots=2: r2 waits in the queue while r0/r1 decode 12 tokens each;
+    # its 4s TTL expires before a slot frees
+    reqs = _fleet(env["prompts"][:3], gens=[12, 12, 4], on_token=tick)
+    reqs[2].deadline = 4.0
+    sched = Scheduler(env["engine"], clock=lambda: clk["t"],
+                      backoff_base=0.0)
+    for r in reqs:
+        sched.submit(r)
+    results, _ = sched.run()
+    assert sched.outcomes["r2"].status == "expired"
+    assert "queued" in sched.outcomes["r2"].error
+    assert results["r2"] == []
+    assert sched.outcomes["r0"].status == "ok"
+    assert sched.outcomes["r1"].status == "ok"
+
+
+def test_bounded_queue_reject(env):
+    sched = Scheduler(env["engine"], queue_cap=2)
+    for r in _fleet(env["prompts"][:2]):
+        sched.submit(r)
+    with pytest.raises(QueueFull, match="capacity"):
+        sched.submit(Request(uid="over", prompt=env["prompts"][2],
+                             max_new=4))
+    # the rejected request left no bookkeeping behind
+    assert "over" not in sched.results and "over" not in sched.outcomes
+    results, _ = sched.run()
+    assert all(sched.outcomes[f"r{i}"].status == "ok" for i in range(2))
+
+
+def test_bounded_queue_block_unblocks_as_run_drains(env):
+    sched = Scheduler(env["engine"], queue_cap=1, admission="block")
+    reqs = _fleet(env["prompts"][:2], gens=[12, 8])
+    sched.submit(reqs[0])                       # queue now at cap
+    t = threading.Thread(target=sched.run)
+    t.start()
+    # blocks until run() pops r0, then queues r1
+    sched.submit(reqs[1], timeout=30.0)
+    t.join(timeout=60.0)
+    assert not t.is_alive()
+    assert len(sched.results["r0"]) == 12 and len(sched.results["r1"]) == 8
+    for u in ("r0", "r1"):
+        assert sched.outcomes[u].status == "ok"
+        base, got = env["baseline"][u], sched.results[u]
+        n = min(len(base), len(got))
+        assert got[:n] == base[:n], u       # greedy streams agree up to min
+
+
+def test_block_admission_timeout_raises(env):
+    sched = Scheduler(env["engine"], queue_cap=1, admission="block")
+    sched.submit(_fleet(env["prompts"][:1])[0])
+    with pytest.raises(QueueFull, match="still full"):
+        sched.submit(Request(uid="late", prompt=env["prompts"][1],
+                             max_new=4), timeout=0.05)
+
+
+# ------------------------------------------------------- snapshot/restore
+def test_preempt_snapshot_resume_token_exact(env, tmp_path):
+    emitted = {"n": 0}
+
+    def preempt_after(uid, tok):
+        emitted["n"] += 1
+        if emitted["n"] == 7:
+            sched.preempt()
+
+    snap_dir = str(tmp_path / "snap")
+    sched = Scheduler(env["engine"], snapshot_dir=snap_dir)
+    for r in _fleet(env["prompts"], on_token=preempt_after):
+        sched.submit(r)
+    partial, _ = sched.run()
+    assert sched.preempted
+    n_partial = sum(len(v) for v in partial.values())
+    n_total = sum(len(v) for v in env["baseline"].values())
+    assert 0 < n_partial < n_total
+
+    streamed = {}
+    sched2 = Scheduler(env["engine"], snapshot_dir=snap_dir)
+    assert sched2.try_restore(callbacks={
+        "r0": lambda u, t: streamed.setdefault(u, []).append(t)})
+    resumed, _ = sched2.run()
+    for u, want in env["baseline"].items():
+        assert sched2.outcomes[u].status == "ok", sched2.outcomes[u]
+        assert resumed[u] == want, (
+            f"{u}: resume drift {resumed[u]} vs {want}")
+    # the re-attached callback streamed exactly the post-resume tokens
+    if "r0" in streamed:
+        assert resumed["r0"][-len(streamed["r0"]):] == streamed["r0"]
+
+
+def test_try_restore_without_snapshot_is_noop(env, tmp_path):
+    sched = Scheduler(env["engine"], snapshot_dir=str(tmp_path / "empty"))
+    os.makedirs(str(tmp_path / "empty"), exist_ok=True)
+    assert not sched.try_restore()
+    assert Scheduler(env["engine"]).try_restore() is False  # no dir at all
+
+
+def test_snapshot_geometry_mismatch_raises(env, tmp_path):
+    snap_dir = str(tmp_path / "snap")
+    sched = Scheduler(env["engine"], snapshot_dir=snap_dir,
+                      snapshot_every=2)
+    for r in _fleet(env["prompts"][:2]):
+        sched.submit(r)
+    sched.run()
+    other = Engine(env["cfg"], env["params"], slots=3, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="geometry"):
+        Scheduler(other, snapshot_dir=snap_dir).try_restore()
+
+
+def test_snapshot_write_fault_never_fatal(env, tmp_path):
+    inj = FaultInjector(specs=[FaultSpec(site="snapshot", count=99)])
+    sched, results, _ = _run(env, injector=inj,
+                             snapshot_dir=str(tmp_path / "snap"),
+                             snapshot_every=2)
+    assert sched.snapshot_errors >= 1           # every write failed...
+    for u in ("r0", "r1", "r2", "r3"):          # ...and serving never blinked
+        assert sched.outcomes[u].status == "ok"
+        assert results[u] == env["baseline"][u], u
+
+
+# ------------------------------------------------------- guard plumbing
+def test_generate_returns_all_ok_without_faults(env):
+    eng = env["engine"]
+    state = eng.init_state()
+    prefix, first, plen = eng.prefill(env["prompts"][0])
+    state = eng.insert(state, prefix, plen, int(first), 0)
+    state, toks, ok = eng.generate(state)
+    ok_h = np.asarray(ok)
+    assert ok_h.shape == (eng.slots,) and bool(ok_h.all())
+
+
+def test_poison_then_generate_flags_only_that_slot(env):
+    eng = env["engine"]
+    state = eng.init_state()
+    for slot in (0, 1):
+        prefix, first, plen = eng.prefill(env["prompts"][slot])
+        state = eng.insert(state, prefix, plen, int(first), slot)
+    state = eng.poison_slot(state, 0)
+    state, toks, ok = eng.generate(state)
+    ok_h = np.asarray(ok)
+    assert not bool(ok_h[0]) and bool(ok_h[1])
+    active = np.asarray(state.active)
+    assert not bool(active[0]) and bool(active[1])   # quarantined on device

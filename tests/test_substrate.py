@@ -253,3 +253,64 @@ def test_straggler_monitor_flags_outliers():
     assert mon.observe(5, 10.0)                    # 10x the EMA
     assert mon.flagged and mon.flagged[0][0] == 5
     assert not mon.observe(6, 1.0)                 # EMA not poisoned
+
+
+# ---------------------------------------------- restore validation (PR 6)
+def test_manifest_restore_leaf_count_mismatch_raises(tmp_path):
+    """Real exceptions, not asserts: a mismatched tree must fail loudly
+    even under `python -O`."""
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    ckpt.save(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(d, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_manifest_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    ckpt.save(d, 1, {"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(d, {"a": jnp.zeros((4,))})
+
+
+# ------------------------------------------ donated-buffer retry (PR 6)
+def test_trainer_retry_survives_donated_buffer_invalidation(tmp_path):
+    """train_step is jit'd with donated state: a step that fails *after*
+    consuming its buffers leaves them invalidated, so a naive retry
+    replays on dead arrays. The trainer must rebuild from the undonated
+    host-side copy taken before the attempt."""
+    calls = {"n": 0}
+
+    def donating_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            for leaf in jax.tree.leaves(state):
+                leaf.delete()   # what a donated, failed jit call leaves
+            raise RuntimeError("step failed after consuming donated buffers")
+        return ({"w": state["w"] + 1}, {"loss": jnp.float32(1.0)})
+
+    dcfg = DataConfig(vocab=16, seq_len=8, global_batch=2, seed=0)
+    tcfg = TrainerConfig(total_steps=2, max_retries=2, log_every=0)
+    tr = Trainer(tcfg, donating_step, dcfg)
+    state, end = tr.run({"w": jnp.arange(4, dtype=jnp.float32)})
+    assert end == 2 and calls["n"] == 3            # one retry, then clean
+    np.testing.assert_array_equal(np.asarray(state["w"]), np.arange(4) + 2)
+
+
+def test_trainer_retry_unsafe_without_undonated_copy(tmp_path):
+    """The hazard the copy exists for: with undonated_retry_copy=False
+    the retry replays on deleted buffers and every attempt fails."""
+    def donating_step(state, batch):
+        for leaf in jax.tree.leaves(state):
+            if not leaf.is_deleted():
+                leaf.delete()
+                raise RuntimeError("consumed donated buffers")
+        return ({"w": state["w"] + 1}, {"loss": jnp.float32(1.0)})
+
+    dcfg = DataConfig(vocab=16, seq_len=8, global_batch=2, seed=0)
+    tcfg = TrainerConfig(total_steps=2, max_retries=2, log_every=0,
+                         undonated_retry_copy=False)
+    tr = Trainer(tcfg, donating_step, dcfg)
+    with pytest.raises(RuntimeError, match="failed after"):
+        tr.run({"w": jnp.arange(4, dtype=jnp.float32)})
