@@ -1,28 +1,40 @@
-"""Continuous-batching engine throughput (ISSUE 5).
+"""Continuous-batching engine throughput + latency (ISSUEs 5, 7).
 
-Aggregate decode tok/s of the slot-based engine (repro.serving_engine)
-vs *sequential* single-request serving (``launch/serve.generate`` per
-request, warm compiled step — StepBuilder memoises the jitted serve
-step, so the sequential baseline pays tracing once, not per request) at
-S ∈ {1, 4, 16} concurrent slots. Same requests, same length bucket
-(max_len), greedy decode both sides; per-request **token-exact parity**
-is recorded alongside the timing — the speedup must come from batching,
-never from changed math.
+Three sections, all landing in BENCH_engine.json:
 
-Both drivers run a warm pass first (compile) and are then timed for
-``rounds`` alternating passes with min-of-rounds (benchmarks/common.py
-discipline: robust to shared-host load drift).
+* ``results`` — aggregate decode tok/s of the slot-based engine
+  (repro.serving_engine) vs *sequential* single-request serving
+  (``launch/serve.generate`` per request, warm compiled step —
+  StepBuilder memoises the jitted serve step, so the sequential
+  baseline pays tracing once, not per request) at S ∈ {1, 4, 16}
+  concurrent slots. Same requests, same length bucket (max_len), greedy
+  decode both sides; per-request **token-exact parity** is recorded
+  alongside the timing — the speedup must come from batching, never
+  from changed math. CI gate: S=16 ≥ 4x with parity=true on every row.
+* ``latency`` — an **open-loop Poisson arrival trace** (exponential
+  inter-arrival times from a seeded rng, submitted by a second thread
+  while the scheduler idles in ``run(stop=...)``): per-request TTFT
+  (submit → first streamed token) and TPOT (mean gap between streamed
+  tokens) measured at the ``on_token`` callback — i.e. *through* the
+  async detokenise worker, which is what a client observes — reduced to
+  p50/p99 per slot count. CI gate: present and finite (absolute wall
+  times are load-dependent; the percentile *columns* are the contract).
+* ``prefill`` — pure-admission throughput (max_new=1 requests: prefill
+  + first token, no decode occupancy) of packed batch prefill
+  (prefill_pack=4) vs the sequential b=1 admission loop
+  (prefill_pack=1) at S=16, same bucketed executables both sides. CI
+  gate: packed ≥ 1.5x.
 
-Results land in BENCH_engine.json; the CI gate requires S=16 aggregate
-throughput ≥ 4x sequential with parity=true on every row (measured ~8x
-on CPU smoke shapes — the batch amortises the per-step layer scan and
-small-matmul dispatch that dominate single-row decode).
+Both drivers of every timed comparison run a warm pass first (compile)
+and are then timed for ``rounds`` alternating passes with min-of-rounds
+(benchmarks/common.py discipline: robust to shared-host load drift).
 """
 from __future__ import annotations
 
 import json
 import os
 import pathlib
+import threading
 import time
 
 import jax
@@ -104,6 +116,131 @@ def _row(cfg, params, sb, slots, prompt_len, gen_len, max_len, rounds=2):
     }
 
 
+def _latency_row(cfg, params, slots, prompt_len, gen_len, max_len,
+                 n_req, rate_hz, seed=0):
+    """Open-loop Poisson trace: a submitter thread feeds the scheduler at
+    ``rate_hz`` mean arrivals/s while it serves in run(stop=...) online
+    mode; TTFT/TPOT are measured at callback delivery (post detok
+    worker) and reduced to p50/p99."""
+    eng = Engine(cfg, params, slots=slots, max_len=max_len)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32)
+               for _ in range(n_req)]
+    gens = [gen_len - (i % 4) for i in range(n_req)]
+
+    # warm pass: compile prefill/insert/generate outside the timed trace
+    warm = Scheduler(eng)
+    warm.submit(Request(uid="warm", prompt=prompts[0], max_new=2))
+    warm.run()
+
+    t_submit, t_first, t_last, counts = {}, {}, {}, {}
+
+    def on_token(uid, tok):
+        now = time.perf_counter()
+        if uid not in t_first:
+            t_first[uid] = now
+        t_last[uid] = now
+        counts[uid] = counts.get(uid, 0) + 1
+
+    sched = Scheduler(eng)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_req))
+    done = {"v": False}
+
+    def submitter():
+        start = time.perf_counter()
+        for i in range(n_req):
+            delay = start + arrivals[i] - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            uid = f"r{i}"
+            t_submit[uid] = time.perf_counter()
+            sched.submit(Request(uid=uid, prompt=prompts[i],
+                                 max_new=gens[i], on_token=on_token))
+        done["v"] = True
+
+    th = threading.Thread(target=submitter)
+    t0 = time.perf_counter()
+    th.start()
+    results, _ = sched.run(stop=lambda: done["v"])
+    th.join()
+    wall = time.perf_counter() - t0
+
+    ttft = np.array([t_first[u] - t_submit[u] for u in t_submit])
+    tpot = np.array([(t_last[u] - t_first[u]) / (counts[u] - 1)
+                     for u in t_submit if counts[u] > 1])
+    n_tok = sum(len(v) for v in results.values())
+    row = {
+        "slots": slots, "requests": n_req, "rate_hz": rate_hz,
+        "prompt_len": prompt_len, "gen_lens": gens, "tokens": n_tok,
+        "wall_s": wall, "tok_s": n_tok / wall,
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p99_s": float(np.percentile(ttft, 99)),
+        "tpot_p50_s": float(np.percentile(tpot, 50)),
+        "tpot_p99_s": float(np.percentile(tpot, 99)),
+        "packed_prefills": sched.packed_prefills,
+    }
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s"):
+        report(f"engine/S{slots}/{k[:-2]}", row[k] * 1e3, "ms",
+               f"Poisson trace rate={rate_hz}/s, n={n_req}")
+    return row
+
+
+def _prefill_row(cfg, params, slots, prompt_len, n_req, max_len,
+                 rounds=3, seed=0):
+    """Pure-admission throughput: max_new=1 requests finish at their
+    first (prefill-sampled) token, so the drain time is admission work
+    only — packed batch prefill vs the sequential b=1 loop, same
+    bucketed executables."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32)
+               for _ in range(n_req)]
+    engines = {"packed": Engine(cfg, params, slots=slots, max_len=max_len),
+               "b1": Engine(cfg, params, slots=slots, max_len=max_len)}
+    packs = {"packed": 4, "b1": 1}
+    # build each engine's decode state ONCE outside the timed drains:
+    # init_state materialises the full S-slot cache (~10x the cost of a
+    # single admission) and max_new=1 requests never touch it, so paying
+    # it per drain would just dilute the packed-vs-b1 admission ratio
+    states = {name: eng.init_state() for name, eng in engines.items()}
+
+    def drain(name, tag):
+        sched = Scheduler(engines[name], prefill_pack=packs[name])
+        for i, pr in enumerate(prompts):
+            sched.submit(Request(uid=f"{tag}{i}", prompt=pr, max_new=1))
+        results, states[name] = sched.run(states[name])
+        return results
+
+    got_packed = drain("packed", "w")            # warm both executables
+    got_b1 = drain("b1", "x")
+    # packed admission must not change the (greedy) first token
+    parity = all(got_packed[f"w{i}"] == got_b1[f"x{i}"]
+                 for i in range(n_req))
+
+    times = {"packed": float("inf"), "b1": float("inf")}
+    tags = {"packed": "tp", "b1": "tq"}
+    for r in range(rounds):
+        for name in ("packed", "b1"):
+            t0 = time.perf_counter()
+            drain(name, f"{tags[name]}{r}_")
+            times[name] = min(times[name], time.perf_counter() - t0)
+    speedup = times["b1"] / times["packed"]
+    report(f"engine/S{slots}/prefill_packed_req_s",
+           n_req / times["packed"], "req/s", "packed admission (pack=4)")
+    report(f"engine/S{slots}/prefill_b1_req_s",
+           n_req / times["b1"], "req/s", "sequential b=1 admission")
+    report(f"engine/S{slots}/prefill_pack_speedup", speedup, "x",
+           "must be >= 1.5x at S=16 (ISSUE 7)")
+    report(f"engine/S{slots}/prefill_parity", float(parity), "bool",
+           "packed first tokens == sequential first tokens")
+    return {
+        "slots": slots, "requests": n_req, "prompt_len": prompt_len,
+        "packed_s": times["packed"], "b1_s": times["b1"],
+        "packed_req_s": n_req / times["packed"],
+        "b1_req_s": n_req / times["b1"],
+        "speedup": speedup, "parity": bool(parity),
+    }
+
+
 def run(smoke: bool = False):
     # match the stream block to the prompt bucket so prefill rides whole
     # C-blocks (one rfft per prompt) on both sides of the comparison
@@ -116,15 +253,26 @@ def run(smoke: bool = False):
     prompt_len, gen_len = 16, 48 if smoke else 64
     max_len = prompt_len + gen_len
     rows = []
+    lat_rows = []
     with mesh:
         for slots in (1, 4, 16):
             rows.append(_row(cfg, params, sb, slots, prompt_len, gen_len,
                              max_len, rounds=2 if smoke else 3))
+        for slots in (4, 16):
+            lat_rows.append(_latency_row(
+                cfg, params, slots, prompt_len,
+                gen_len=12 if smoke else 24, max_len=max_len,
+                n_req=2 * slots, rate_hz=4.0))
+        prefill_row = _prefill_row(
+            cfg, params, slots=16, prompt_len=prompt_len,
+            n_req=16, max_len=max_len, rounds=2 if smoke else 3)
     payload = {
         "bench": "engine",
         "platform": backend.platform(),
         "arch": cfg.name,
         "results": rows,
+        "latency": lat_rows,
+        "prefill": prefill_row,
     }
     try:
         _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")

@@ -201,8 +201,17 @@ def main():
     # retraced across inserts/evictions
     assert args.requests > args.slots, "demo wants recycling: requests > slots"
     assert sched.prefills == args.requests
+    assert sched.packed_prefills >= 1, "admission never packed a batch"
     assert eng.trace_counts["generate"] == 1, eng.trace_counts
-    assert eng.trace_counts["insert"] == 1, eng.trace_counts
+    # admission traces are bounded by shapes, never by request count:
+    # one insert trace (sequential fallback), one insert_from trace per
+    # distinct packed batch size, one prefill executable per
+    # (batch, bucket) pair
+    assert eng.trace_counts["insert"] <= 1, eng.trace_counts
+    assert 1 <= eng.trace_counts["insert_from"] <= args.slots, (
+        eng.trace_counts)
+    assert eng.trace_counts["prefill_bucket"] <= args.slots * len(
+        eng.buckets), eng.trace_counts
     for i, g in enumerate(gens):
         assert len(results[f"req{i}"]) == g, (i, len(results[f"req{i}"]), g)
         assert results[f"req{i}"] == streamed[f"req{i}"]  # cb saw every token

@@ -44,7 +44,14 @@ def set_default_backend(use_pallas: bool | None) -> None:
 
 
 def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=None):
-    """Depthwise short conv (sparse Toeplitz component). x (b,n,d), filt (d,m)."""
+    """Depthwise short conv — the m-tap sparse Toeplitz component.
+
+    x (b, n, d) fp32/bf16; filt (d, m) per-channel taps; returns
+    (b, n, d) in x's dtype. ``causal=True`` convolves lags 0..m-1
+    (zero left boundary), ``False`` centres the taps. Oracle:
+    ref.short_conv_ref; the Pallas kernel tiles the sequence with an
+    (m-1)-halo. Backward: flipped taps + mirrored offset for the signal,
+    ``conv_tap_grad`` correlation for the taps."""
     if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import short_conv as k
         return k.short_conv_pallas(x, filt, causal, interpret=interpret)
@@ -52,7 +59,14 @@ def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=None):
 
 
 def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=None):
-    """z = W^T x, banded linear-interp W. x (b,n,d) -> (b,r,d)."""
+    """z = Wᵀ x — project n positions onto r inducing points.
+
+    x (b, n, d) fp32/bf16; idx_lo (n,) int32 lower-neighbour indices and
+    w_lo (n,) weights describe the banded linear-interp W (reference
+    path only — the Pallas kernel regenerates the hat weights in VMEM
+    from the uniform grid); returns (b, r, d) in x's dtype. Oracle:
+    ref.interp_reduce_ref. Backward: one :func:`interp_expand` launch
+    (W is linear, so the adjoint is the sibling kernel)."""
     if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import interp_matvec as k
         return k.interp_reduce_pallas(x, idx_lo, w_lo, r, interpret=interpret)
@@ -60,7 +74,12 @@ def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=None):
 
 
 def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=None):
-    """y = W z. z (b,r,d) -> (b,n,d)."""
+    """y = W z — interpolate r inducing values back to n positions.
+
+    z (b, r, d) fp32/bf16; idx_lo (n,) int32 / w_lo (n,) as in
+    :func:`interp_reduce` (n is read off idx_lo); returns (b, n, d) in
+    z's dtype. Oracle: ref.interp_expand_ref. Backward: one
+    :func:`interp_reduce` launch."""
     if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import interp_matvec as k
         return k.interp_expand_pallas(z, idx_lo, w_lo, interpret=interpret)
@@ -155,7 +174,16 @@ def fd_tno(x, khat_real, *, use_pallas=None, interpret=None):
 
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
              interpret=None, hshard=None):
-    """Mamba-2 SSD. See ref.ssd_scan_ref for shapes."""
+    """Mamba-2 SSD chunked scan (the model-zoo state-space mixer).
+
+    x (bt, n, h, p) fp32/bf16 per-head inputs; dt (bt, n, h) positive
+    step sizes; a (h,) negative decay rates; b/c (bt, n, g, s) in/out
+    projections (g groups, s state dim); d_skip (h,) skip; returns
+    (bt, n, h, p). Sequential-recurrence oracle: ref.ssd_scan_ref; the
+    dispatched paths (Pallas kernel / ssd_chunked reference) both use
+    the chunked intra/inter-state formulation with ``chunk``-length
+    blocks. ``hshard`` re-asserts head-axis TP sharding on the
+    chunk-state carry (reference path; see ssd_chunked docstring)."""
     if backend.resolve_use_pallas(use_pallas):
         from repro.kernels import ssd_scan as k
         return k.ssd_scan_pallas(x, dt, a, b, c, d_skip, chunk=chunk,

@@ -98,7 +98,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy decode (the default); > 0 samples — "
+                         "both modes work solo and with --engine "
+                         "(per-slot RNG lanes)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="engine mode: truncate sampling to the k most "
+                         "likely tokens (0 = full distribution; requires "
+                         "--temperature > 0)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -124,6 +131,18 @@ def main(argv=None):
                             or args.queue_cap is not None):
         ap.error("--chaos/--deadline/--queue-cap require --engine "
                  "(the supervised scheduler owns those knobs)")
+    if args.temperature < 0:
+        ap.error(f"--temperature {args.temperature} must be >= 0")
+    if args.top_k < 0:
+        ap.error(f"--top-k {args.top_k} must be >= 0")
+    if args.top_k > 0 and args.temperature <= 0:
+        # greedy decode ignores top-k; a silently inert knob is worse
+        # than a loud one
+        ap.error("--top-k requires --temperature > 0 "
+                 "(greedy decode never consults it)")
+    if args.top_k > 0 and not args.engine:
+        ap.error("--top-k requires --engine (the solo path samples the "
+                 "full distribution)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -141,17 +160,11 @@ def main(argv=None):
             rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
             jnp.int32)
         if args.engine:
-            if args.temperature > 0:
-                # the engine is greedy-only (its parity contract is
-                # token-exactness vs solo decode); refuse rather than
-                # silently return greedy tokens for a sampled request
-                ap.error("--engine does not support --temperature > 0 "
-                         "(greedy-only; sampled decode with per-slot RNG "
-                         "lanes is a ROADMAP item)")
             from repro.serving_engine import (Engine, FaultInjector, Request,
                                               Scheduler)
             eng = Engine(cfg, params, slots=args.slots,
-                         max_len=args.prompt_len + args.gen_len)
+                         max_len=args.prompt_len + args.gen_len,
+                         temperature=args.temperature, top_k=args.top_k)
             injector = None
             if args.chaos is not None:
                 injector = FaultInjector(seed=args.chaos, rates={
@@ -163,7 +176,8 @@ def main(argv=None):
             for i in range(args.batch):
                 sched.submit(Request(uid=f"req{i}",
                                      prompt=np.asarray(prompt[i]),
-                                     max_new=args.gen_len))
+                                     max_new=args.gen_len,
+                                     seed=args.seed + i))
             t0 = time.time()
             results, _ = sched.run()
             dt = time.time() - t0
@@ -173,9 +187,13 @@ def main(argv=None):
                 by_status[out.status] = by_status.get(out.status, 0) + 1
             ok_uid = next((u for u, o in sched.outcomes.items()
                            if o.status == "ok"), None)
-            print(f"[serve] engine({eng.slots} slots) generated {n_new} "
-                  f"tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s); "
+            mode = ("greedy" if args.temperature == 0 else
+                    f"T={args.temperature}"
+                    + (f"/top{args.top_k}" if args.top_k else ""))
+            print(f"[serve] engine({eng.slots} slots, {mode}) generated "
+                  f"{n_new} tokens in {dt:.2f}s ({n_new / dt:.1f} tok/s); "
                   f"steps={sched.steps} prefills={sched.prefills} "
+                  f"(packed={sched.packed_prefills}) "
                   f"retries={sched.retries}; outcomes={by_status}; "
                   f"sample: "
                   f"{results[ok_uid][:16] if ok_uid else '(none ok)'}")

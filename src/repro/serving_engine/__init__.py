@@ -1,27 +1,33 @@
-"""Continuous-batching TNN serving engine (PR 5) + fault tolerance (PR 6).
+"""Continuous-batching TNN serving engine — see docs/serving.md.
 
 Slot-based decode state + prefill→insert→generate loop over the ragged
-(per-slot cur_len) decode path of models/serving.py — see state.py /
-engine.py / scheduler.py and README "Serving engine". PR 6 adds the
-serving supervisor: request-level error isolation with retry/backoff,
-deadlines + bounded-queue backpressure, a non-finite guard with slot
-quarantine, engine snapshot/restore for preemption, and a deterministic
-FaultInjector chaos harness (faults.py / snapshot.py, README "Fault
-tolerance").
+(per-slot cur_len) decode path of models/serving.py (PR 5: state.py /
+engine.py / scheduler.py). PR 6 adds the serving supervisor:
+request-level error isolation with retry/backoff, deadlines +
+bounded-queue backpressure, a non-finite guard with slot quarantine,
+engine snapshot/restore for preemption, and a deterministic
+FaultInjector chaos harness (faults.py / snapshot.py). PR 7 adds the
+production front-end: length-bucketed prefill executables, packed batch
+admission scattered through insert_from, per-slot PRNG lanes for
+temperature/top-k sampling, and an async detokenise worker off the
+decode hot loop.
 """
 from repro.serving_engine.engine import Engine, default_slots
 from repro.serving_engine.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.serving_engine.scheduler import (EngineStepError, Outcome,
-                                            QueueFull, Request, Scheduler)
+                                            QueueFull, Request, Scheduler,
+                                            default_detok_async,
+                                            default_prefill_pack)
 from repro.serving_engine.snapshot import load_snapshot, save_snapshot
 from repro.serving_engine.state import (DecodeState, init_decode_state,
                                         insert, insert_prefix_cache, poison,
-                                        release)
+                                        release, select_rows, take_row)
 
 __all__ = [
     "Engine", "default_slots", "Request", "Scheduler", "Outcome",
     "QueueFull", "EngineStepError", "FaultInjector", "FaultSpec",
     "InjectedFault", "load_snapshot", "save_snapshot", "DecodeState",
     "init_decode_state", "insert", "insert_prefix_cache", "poison",
-    "release",
+    "release", "select_rows", "take_row", "default_prefill_pack",
+    "default_detok_async",
 ]

@@ -1,36 +1,57 @@
 """Continuous-batching inference engine: prefill → insert → generate.
 
 The device-side half of the serving engine (the host-side queue lives in
-:mod:`repro.serving_engine.scheduler`). Three jit-stable functions over a
+:mod:`repro.serving_engine.scheduler`). Jit-stable functions over a
 :class:`~repro.serving_engine.state.DecodeState` of S slots:
 
 * ``prefill(prompt)`` — run one request's prompt through a **batch-1**
-  cache and return ``(prefix_cache, first_token, prompt_len)``. FD
-  streaming archs consume the prompt in C-token blocks through the
-  overlap-save machinery (serving.decode_chunk — PR 4's chunked
-  prefill); the remainder, and every other mixer family, is
-  teacher-forced token-by-token. Exactly the math of the solo
-  ``launch/serve.generate`` prefill, so engine output is token-exact
-  against solo decode.
-* ``insert(state, prefix, plen, token, slot)`` — tree-map slice-in of
-  the prefix cache into a free slot without touching other slots'
-  rows (in-flight requests keep decoding across inserts).
+  cache and return ``(prefix_cache, first_token, prompt_len)``. The
+  prompt is padded up to a geometric **length bucket** and driven
+  through one cached executable per (batch, bucket) pair — a masked
+  ``lax.scan`` over chunk/token steps — so serving traffic with ragged
+  prompt lengths compiles O(log max_len) prefill programs instead of
+  one per distinct length (the MaxText offline-inference shape). FD
+  streaming archs consume whole C-token blocks through the overlap-save
+  machinery (serving.decode_chunk — PR 4's chunked prefill); the
+  remainder, and every other mixer family, is teacher-forced
+  token-by-token. Exactly the math of the solo ``launch/serve.generate``
+  prefill, so engine output is token-exact against solo decode.
+* ``prefill_packed(prompts)`` — the batched variant: pack several
+  queued prompts into ONE padded prefill batch (same masked-scan
+  executable at batch P), returning a packed cache whose rows
+  ``insert_from`` scatters into slots. Greedy packed prefill is
+  token-exact vs sequential b=1 prefill (per-row masking + the row-wise
+  bitwise stability of batched XLA ops that the whole engine parity
+  contract already rests on).
+* ``insert(state, prefix, plen, token, slot)`` / ``insert_from(state,
+  packed, row, plen, token, slot)`` — tree-map slice-in of a prefix
+  cache (or one row of a packed prefill batch) into a free slot without
+  touching other slots' rows.
 * ``generate(state)`` — ONE batched masked decode_step over all S slots
-  at their per-slot positions; advances only active slots, greedy-picks
-  each slot's next token. With the (default-on) non-finite guard it also
-  returns a per-slot ``ok`` mask and **quarantines** bad slots at the
-  device level: a slot whose logits went non-finite (SDC, a poisoned
-  request, an overflowed bf16 path) is frozen — its position/token do
-  not advance and its active bit drops — so garbage is never fed back,
-  and the host scheduler records an error outcome and recycles the slot
-  (the next insert overwrites the whole row). Mirrors the trainer's NaN
-  guard on the serving side.
+  at their per-slot positions; advances only active slots. With
+  ``temperature == 0`` (default) each slot's next token is the argmax;
+  with ``temperature > 0`` it is drawn from the temperature/top-k
+  distribution using the slot's private PRNG lane (``DecodeState.rng``),
+  seeded at insert from the request seed and split once per advancing
+  step — sampled streams are seeded-reproducible and independent of
+  slot placement, and the T=0 path is literally the greedy code. With
+  the (default-on) non-finite guard it also returns a per-slot ``ok``
+  mask and **quarantines** bad slots at the device level: a slot whose
+  logits went non-finite (SDC, a poisoned request, an overflowed bf16
+  path) is frozen — its position/token do not advance and its active
+  bit drops — so garbage is never fed back, and the host scheduler
+  records an error outcome and recycles the slot (the next insert
+  overwrites the whole row). Mirrors the trainer's NaN guard on the
+  serving side.
 
 jit-stability contract: at fixed S, the decode loop never retraces
 across steps, inserts, or evictions — positions/slot indices/tokens are
-traced scalars and vectors, shapes depend only on (S, max_len, C).
-``trace_counts`` exposes the per-function trace counters the contract
-test pins. Slot count defaults to ``REPRO_ENGINE_SLOTS`` (8).
+traced scalars and vectors, shapes depend only on (S, max_len, C); the
+prefill path traces once per (batch, bucket) pair. ``trace_counts``
+exposes the per-function trace counters the contract tests pin. Slot
+count defaults to ``REPRO_ENGINE_SLOTS`` (8); ``REPRO_PREFILL_BUCKET0``
+(16) sets the smallest bucket and ``REPRO_PREFILL_BUCKETS=0`` falls
+back to the PR 5 per-length chunk/token host loop.
 """
 from __future__ import annotations
 
@@ -38,6 +59,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import serving
 from repro.models.config import ArchConfig
@@ -45,6 +67,8 @@ from repro.models.context import Ctx
 from repro.serving_engine import state as st
 
 _ENV_SLOTS = "REPRO_ENGINE_SLOTS"
+_ENV_BUCKET0 = "REPRO_PREFILL_BUCKET0"
+_ENV_BUCKETS = "REPRO_PREFILL_BUCKETS"
 
 
 def default_slots() -> int:
@@ -57,17 +81,33 @@ def default_slots() -> int:
     return s
 
 
+def _env_flag(name: str, default: bool) -> bool:
+    v = os.environ.get(name)
+    if v is None or v == "":
+        return default
+    return v.strip().lower() not in ("0", "false", "off", "no")
+
+
 class Engine:
     """Bind (cfg, params, S slots, max_len) and build the jitted step
-    functions once. Greedy decoding (temperature 0) — the parity
-    contract against solo decode is token-exactness."""
+    functions once. ``temperature == 0`` (default) decodes greedily —
+    the parity contract against solo decode is token-exactness;
+    ``temperature > 0`` samples per slot from private PRNG lanes
+    (optionally top-k truncated)."""
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int | None = None,
                  max_len: int = 256, ctx: Ctx | None = None, dtype=None,
-                 guard_nonfinite: bool = True):
+                 guard_nonfinite: bool = True,
+                 temperature: float = 0.0, top_k: int = 0,
+                 bucket0: int | None = None,
+                 use_buckets: bool | None = None):
         if cfg.kind != "decoder":
             raise NotImplementedError(
                 f"serving engine supports decoder archs, got {cfg.kind}")
+        if temperature < 0:
+            raise ValueError(f"temperature={temperature} must be >= 0")
+        if top_k < 0:
+            raise ValueError(f"top_k={top_k} must be >= 0")
         self.cfg = cfg
         self.params = params
         self.slots = default_slots() if slots is None else int(slots)
@@ -77,6 +117,8 @@ class Engine:
             raise ValueError(f"slots={self.slots} must be >= 1")
         self.max_len = int(max_len)
         self.guard_nonfinite = bool(guard_nonfinite)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
         self.ctx = ctx or Ctx(decode=True)
         self.dtype = dtype
         # one reusable batch-1 prefix template: constants (stream kernel
@@ -88,13 +130,28 @@ class Engine:
         self._chunk_c = (serving.stream_block_of(self._prefix_template)
                          if serving.supports_chunked_prefill(
                              cfg, self._prefix_template) else None)
-        self.trace_counts = {"generate": 0, "insert": 0, "decode1": 0,
-                             "chunk1": 0}
+        self.use_buckets = (_env_flag(_ENV_BUCKETS, True)
+                            if use_buckets is None else bool(use_buckets))
+        if bucket0 is None:
+            bucket0 = int(os.environ.get(_ENV_BUCKET0) or 16)
+        self.buckets = self._bucket_ladder(int(bucket0))
+        self._templates = {1: self._prefix_template}  # batch → packed tmpl
+        self.trace_counts = {"generate": 0, "insert": 0, "insert_from": 0,
+                             "decode1": 0, "chunk1": 0, "prefill_bucket": 0}
         self._generate = jax.jit(self._make("generate", self._generate_fn))
         self._insert = jax.jit(self._make("insert", self._insert_fn))
+        self._insert_from = jax.jit(
+            self._make("insert_from", self._insert_from_fn))
         self._decode1 = jax.jit(self._make("decode1", self._decode1_fn))
         self._chunk1 = (jax.jit(self._make("chunk1", self._chunk1_fn))
                         if self._chunk_c else None)
+        # n_tok (the token-remainder phase length) is static: the
+        # C-aligned fast path (n_tok=0, whole-chunk prompts) and the
+        # general path (n_tok=C) are separate executables — at most two
+        # per (batch, bucket) pair
+        self._prefill_bucket = jax.jit(
+            self._make("prefill_bucket", self._prefill_bucket_fn),
+            static_argnums=(5,))
 
     # ------------------------------------------------------------ plumbing
     def _make(self, name, fn):
@@ -103,9 +160,80 @@ class Engine:
             return fn(*args)
         return counted
 
-    def _pick(self, logits):
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
+    def _bucket_ladder(self, b0: int):
+        """Geometric prompt-length buckets b0, 2·b0, … up to capacity.
+        For streaming archs every rung is a multiple of the block size C,
+        so the packed prefill's chunk phase stays on C-boundaries; the
+        top rung rounds capacity UP to a C-multiple — masked rows may
+        compute past capacity but those writes are merge-discarded."""
+        if b0 < 1:
+            raise ValueError(f"prefill bucket0={b0} must be >= 1")
+        c = self._chunk_c or 1
+        b0 = ((max(b0, c) + c - 1) // c) * c
+        cap = self.capacity if self.capacity is not None else self.max_len
+        top = ((max(cap, b0) + c - 1) // c) * c
+        ladder = []
+        b = b0
+        while b < top:
+            ladder.append(b)
+            b *= 2
+        ladder.append(top)
+        return ladder
+
+    def bucket_for(self, p: int) -> int | None:
+        """Smallest bucket holding a p-token prompt (None = off-ladder:
+        bucketing disabled, or p beyond the top rung on a
+        length-unbounded arch — both fall back to the per-length loop)."""
+        if not self.use_buckets:
+            return None
+        for b in self.buckets:
+            if p <= b:
+                return b
+        return None
+
+    def _template_for(self, batch: int):
+        if batch not in self._templates:
+            self._templates[batch] = serving.init_cache(
+                self.cfg, batch, self.max_len, self.dtype,
+                params=self.params)
+        return self._templates[batch]
+
+    def _pick_last(self, last):
+        """Greedy token per row from last-position logits (b, V_pad)."""
+        nxt = jnp.argmax(last, axis=-1)
         return jnp.minimum(nxt, self.cfg.vocab - 1).astype(jnp.int32)
+
+    def _pick(self, logits):
+        return self._pick_last(logits[:, -1])
+
+    def _sample_last(self, last, keys):
+        """Temperature/top-k sample per row: last (b, V_pad) logits,
+        keys (b, 2) uint32 — one private lane per row."""
+        logits = last.astype(jnp.float32) / self.temperature
+        ids = jnp.arange(last.shape[-1])
+        logits = jnp.where(ids < self.cfg.vocab, logits, -jnp.inf)
+        if 0 < self.top_k < self.cfg.vocab:
+            kth = jax.lax.top_k(logits, self.top_k)[0][..., -1:]
+            logits = jnp.where(logits >= kth, logits, -jnp.inf)
+        nxt = jax.vmap(jax.random.categorical)(keys, logits)
+        return nxt.astype(jnp.int32)
+
+    def _first_candidate(self, last, kfirst):
+        """Next-token candidate during prefill: sampled from the
+        request's first-token key lane when sampling, else argmax."""
+        if self.temperature > 0:
+            return self._sample_last(last, kfirst)
+        return self._pick_last(last)
+
+    @staticmethod
+    def _seed_keys(seeds):
+        """(b,) int32 seeds → (kslot, kfirst), each (b, 2) uint32. Both
+        lanes derive from the seed alone, so prefill (kfirst) and insert
+        (kslot) recompute them independently without passing keys through
+        the host API."""
+        base = jax.vmap(jax.random.PRNGKey)(seeds)
+        ks = jax.vmap(jax.random.split)(base)
+        return ks[:, 0], ks[:, 1]
 
     # ------------------------------------------------------- traced bodies
     def _decode1_fn(self, params, tok, cache, pos):
@@ -116,8 +244,85 @@ class Engine:
         return serving.decode_chunk(params, self.cfg, self.ctx,
                                     {"tokens": tok}, cache, pos)
 
-    def _insert_fn(self, state, prefix, slot, plen, token):
-        return st.insert(state, prefix, slot, plen, token)
+    def _insert_fn(self, state, prefix, slot, plen, token, seed):
+        kslot, _ = self._seed_keys(seed[None])
+        return st.insert(state, prefix, slot, plen, token, key=kslot[0])
+
+    def _insert_from_fn(self, state, packed, row, slot, plen, token, seed):
+        prefix = st.take_row(packed, row)
+        kslot, _ = self._seed_keys(seed[None])
+        return st.insert(state, prefix, slot, plen, token, key=kslot[0])
+
+    def _n_tok_for(self, bucket: int, plens) -> int:
+        """Static token-remainder phase length for a packed prefill:
+        streaming archs need C catch-up steps only when some prompt is
+        not chunk-aligned (0 when all are — the fast path); non-stream
+        archs teacher-force the whole bucket."""
+        c = self._chunk_c
+        if c and bucket % c == 0:
+            return 0 if all(p % c == 0 for p in plens) else c
+        return bucket
+
+    def _prefill_bucket_fn(self, params, cache, prompts, plens, seeds,
+                           n_tok):
+        """Packed bucketed prefill: prompts (B, Lb) padded to bucket Lb,
+        plens (B,) true lengths (0 = dead pad row). One masked lax.scan
+        executable per (B, Lb, n_tok): streaming archs run Lb//C
+        whole-chunk steps then ``n_tok`` (≤C) per-row remainder tokens;
+        everything else teacher-forces all Lb positions. Rows merge
+        their cache only while a step is inside their own prompt
+        (state.select_rows), so each row's final cache — and its greedy
+        first token — is bit-identical to a b=1 prefill of that prompt
+        alone."""
+        B, Lb = prompts.shape
+        _, kfirst = self._seed_keys(seeds)
+        first = jnp.zeros((B,), jnp.int32)
+        c = self._chunk_c
+        if c and Lb % c == 0:
+            nb = Lb // c
+
+            def chunk_body(carry, k):
+                cache, first = carry
+                tok = jax.lax.dynamic_slice(
+                    prompts, (jnp.int32(0), k * c), (B, c))
+                logits, new = serving.decode_chunk(
+                    params, self.cfg, self.ctx, {"tokens": tok}, cache,
+                    k * c)
+                take = (k + 1) * c <= plens
+                cache = st.select_rows(take, new, cache)
+                cand = self._first_candidate(logits[:, -1], kfirst)
+                first = jnp.where((k + 1) * c == plens, cand, first)
+                return (cache, first), None
+
+            (cache, first), _ = jax.lax.scan(
+                chunk_body, (cache, first), jnp.arange(nb, dtype=jnp.int32))
+            base = (plens // c) * c
+        else:
+            base = jnp.zeros_like(plens)
+        if n_tok == 0:
+            return cache, first
+
+        def tok_body(carry, t):
+            cache, first = carry
+            pos = base + t
+            take = pos < plens
+            # finished/pad rows park at position 0 like the generate
+            # step's inactive slots — never on a stream-block boundary
+            # refresh, and their writes are merge-discarded anyway
+            pos_safe = jnp.where(take, pos, 0)
+            idx = jnp.clip(pos, 0, Lb - 1)
+            tok = jnp.take_along_axis(prompts, idx[:, None], axis=1)
+            logits, new = serving.decode_step(
+                params, self.cfg, self.ctx, {"tokens": tok}, cache,
+                pos_safe)
+            cache = st.select_rows(take, new, cache)
+            cand = self._first_candidate(logits[:, -1], kfirst)
+            first = jnp.where(pos == plens - 1, cand, first)
+            return (cache, first), None
+
+        (cache, first), _ = jax.lax.scan(
+            tok_body, (cache, first), jnp.arange(n_tok, dtype=jnp.int32))
+        return cache, first
 
     def _generate_fn(self, params, state):
         # inactive slots step at position 0 with a pad token: harmless
@@ -128,11 +333,21 @@ class Engine:
         toks = jnp.where(state.active, state.tokens, 0)[:, None]
         logits, cache = serving.decode_step(
             params, self.cfg, self.ctx, {"tokens": toks}, state.cache, cur)
-        nxt = self._pick(logits)
+        last = logits[:, -1]
+        if self.temperature > 0:
+            # split each slot's private lane; parked/frozen slots keep
+            # their key (only advancing slots consume randomness, so a
+            # snapshot-resumed run replays the identical stream)
+            pair = jax.vmap(jax.random.split)(state.rng)
+            new_keys, sub = pair[:, 0], pair[:, 1]
+            nxt = self._sample_last(last, sub)
+        else:
+            new_keys = state.rng
+            nxt = self._pick_last(last)
         if self.guard_nonfinite:
             # parked slots decode scratch rows (possibly a quarantined
             # slot's NaN remnants) — only active slots can be flagged
-            row_ok = jnp.all(jnp.isfinite(logits[:, -1]), axis=-1)
+            row_ok = jnp.all(jnp.isfinite(last), axis=-1)
             ok = jnp.where(state.active, row_ok, True)
         else:
             ok = jnp.ones((state.slots,), bool)
@@ -144,6 +359,7 @@ class Engine:
             cur_len=jnp.where(advance, state.cur_len + 1, state.cur_len),
             tokens=jnp.where(advance, nxt, state.tokens),
             active=advance,
+            rng=jnp.where(advance[:, None], new_keys, state.rng),
         )
         return new_state, nxt, ok
 
@@ -152,13 +368,7 @@ class Engine:
         return st.init_decode_state(self.cfg, self.params, self.slots,
                                     self.max_len, self.dtype)
 
-    def prefill(self, prompt):
-        """prompt: (p,) or (1, p) int tokens. Returns (prefix_cache,
-        first_token (device scalar), prompt_len). Raises when the prompt
-        alone exceeds the slot capacity (an oversized insert would clamp
-        the cache writes and silently corrupt the ring/KV rows)."""
-        prompt = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
-        p = prompt.shape[1]
+    def _check_prompt_len(self, p: int):
         if p < 1:
             raise ValueError("empty prompt")
         if self.capacity is not None and p > self.capacity:
@@ -166,6 +376,12 @@ class Engine:
                 f"prompt length {p} exceeds slot capacity "
                 f"{self.capacity} (cache max_len {self.max_len}); "
                 "raise Engine(max_len=...) or reject the request")
+
+    def _prefill_loop(self, prompt, seed: int):
+        """PR 5 per-length fallback: whole C-blocks then token-by-token
+        on a batch-1 cache (one decode1/chunk1 trace, but a distinct
+        XLA *launch sequence* per prompt length)."""
+        p = prompt.shape[1]
         cache = self._prefix_template
         pos = 0
         logits = None
@@ -180,13 +396,91 @@ class Engine:
             logits, cache = self._decode1(
                 self.params, prompt[:, pos:pos + 1], cache, jnp.int32(pos))
             pos += 1
-        return cache, self._pick(logits)[0], p
+        if self.temperature > 0:
+            _, kfirst = self._seed_keys(jnp.asarray([seed], jnp.int32))
+            first = self._sample_last(logits[:, -1], kfirst)[0]
+        else:
+            first = self._pick(logits)[0]
+        return cache, first, p
 
-    def insert(self, state, prefix_cache, plen, token, slot):
+    def prefill(self, prompt, seed: int = 0):
+        """prompt: (p,) or (1, p) int tokens. Returns (prefix_cache,
+        first_token (device scalar), prompt_len). The prompt is padded to
+        its length bucket and run through the cached (batch=1, bucket)
+        executable; off-ladder lengths use the per-length loop. ``seed``
+        only matters when the engine samples (temperature > 0): it
+        derives the request's first-token key and must match the seed
+        later passed to ``insert``. Raises when the prompt alone exceeds
+        the slot capacity (an oversized insert would clamp the cache
+        writes and silently corrupt the ring/KV rows)."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        p = prompt.shape[1]
+        self._check_prompt_len(p)
+        bucket = self.bucket_for(p)
+        if bucket is None:
+            return self._prefill_loop(jnp.asarray(prompt), seed)
+        # pad on the host: ONE device transfer per admission, not a
+        # zeros + update_slice dispatch pair (admission is glue-bound)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :p] = prompt[0]
+        cache, first = self._prefill_bucket(
+            self.params, self._template_for(1), jnp.asarray(padded),
+            jnp.asarray([p], jnp.int32), jnp.asarray([seed], jnp.int32),
+            self._n_tok_for(bucket, [p]))
+        return cache, first[0], p
+
+    def prefill_packed(self, prompts, seeds=None):
+        """Pack several prompts into ONE padded prefill batch.
+
+        prompts: sequence of (p_i,) int token arrays; seeds: optional
+        per-prompt sampling seeds. All prompts are padded to the bucket
+        of the longest and driven through a single (B, bucket)
+        executable. Returns (packed_cache, first_tokens (B,) device,
+        plens list) — scatter row i into a slot with :meth:`insert_from`.
+        Raises when any prompt is off the bucket ladder (callers check
+        :meth:`bucket_for` first and fall back to sequential prefill)."""
+        B = len(prompts)
+        if B < 1:
+            raise ValueError("prefill_packed needs at least one prompt")
+        prompts = [np.asarray(pr, np.int32).reshape(-1) for pr in prompts]
+        plens = [int(pr.shape[0]) for pr in prompts]
+        for p in plens:
+            self._check_prompt_len(p)
+        bucket = self.bucket_for(max(plens))
+        if bucket is None:
+            raise ValueError(
+                f"prompt length {max(plens)} is off the bucket ladder "
+                f"(buckets={self.buckets}, use_buckets={self.use_buckets})")
+        # host-side packing: one (B, bucket) transfer per wave instead of
+        # B .at[].set dispatches — the packed path's win is amortised
+        # launch overhead, so its own glue has to stay thin
+        padded = np.zeros((B, bucket), np.int32)
+        for i, pr in enumerate(prompts):
+            padded[i, :plens[i]] = pr
+        if seeds is None:
+            seeds = [0] * B
+        cache, first = self._prefill_bucket(
+            self.params, self._template_for(B), jnp.asarray(padded),
+            jnp.asarray(plens, jnp.int32), jnp.asarray(seeds, jnp.int32),
+            self._n_tok_for(bucket, plens))
+        return cache, first, plens
+
+    def insert(self, state, prefix_cache, plen, token, slot, seed: int = 0):
         """Admit a prefilled request into ``slot`` (traced index — no
-        retrace across slots)."""
+        retrace across slots). ``seed`` must be the request's prefill
+        seed: it re-derives the slot's sampling key lane."""
         return self._insert(state, prefix_cache, jnp.int32(slot),
-                            jnp.int32(plen), jnp.asarray(token, jnp.int32))
+                            jnp.int32(plen), jnp.asarray(token, jnp.int32),
+                            jnp.int32(seed))
+
+    def insert_from(self, state, packed_cache, row, plen, token, slot,
+                    seed: int = 0):
+        """Admit row ``row`` of a packed prefill cache into ``slot``
+        (both traced — one trace per packed batch size)."""
+        return self._insert_from(state, packed_cache, jnp.int32(row),
+                                 jnp.int32(slot), jnp.int32(plen),
+                                 jnp.asarray(token, jnp.int32),
+                                 jnp.int32(seed))
 
     def generate(self, state):
         """One batched decode step: (state, tokens (S,), ok (S,)) — read

@@ -27,6 +27,7 @@ detail)`` for post-mortem assertions in tests.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -76,10 +77,19 @@ class FaultInjector:
         self._visits: Dict[str, int] = {s: 0 for s in SITES}
         self.fired = 0
         self.log: List[Tuple[str, int, str, str]] = []
+        # the scheduler's detokenise worker hits the callback site from
+        # its own thread while the loop thread hits prefill/decode —
+        # serialise counter/rng mutation so schedules stay deterministic
+        # per site (visit order within a site is still FIFO)
+        self._mutex = threading.Lock()
 
     # ------------------------------------------------------------ matching
     def _decide(self, site: str, uid: Optional[str] = None):
         """Returns None, ("raise", msg) or ("poison", slot)."""
+        with self._mutex:
+            return self._decide_locked(site, uid)
+
+    def _decide_locked(self, site: str, uid: Optional[str] = None):
         visit = self._visits[site]
         self._visits[site] += 1
         action = None

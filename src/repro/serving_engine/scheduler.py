@@ -5,13 +5,26 @@ continuous-batching loop (MaxText/JetStream offline_inference shape):
 
     while work:
         watchdog: evict expired slots, drop expired queued requests
-        if free slot and queued request:   # greedy prefill-first
-            prefix, first, p = engine.prefill(request)   # C-block chunked
-            state = engine.insert(state, prefix, p, first, slot)
+        if free slots and queued requests:  # greedy prefill-first
+            pack ≤ prefill_pack requests → ONE padded batch prefill
+            scatter each row into its slot (engine.insert_from)
         else:
             state, tokens, ok = engine.generate(state)   # all slots, 1 step
-        stream tokens to per-request callbacks; evict EOS/max-len/
-        non-finite slots, recycle them for the queue
+        record tokens; hand callbacks to the detokenise worker thread;
+        evict EOS/max-len/non-finite slots, recycle them for the queue
+
+PR 7 makes admission *batched* and detokenisation *asynchronous*: up to
+``prefill_pack`` queued prompts are packed into one bucketed prefill
+executable per step (``engine.prefill_packed``; prompts that fall off
+the bucket ladder, or a pack of one, use the sequential path), and
+``on_token`` callbacks run on a background worker thread draining a
+bounded token queue, so host-side detokenisation overlaps the next
+jitted decode step instead of serialising with it. Ordering is
+preserved (single worker, FIFO), callback exceptions still detach the
+callback (now on the worker), and the queue is drained at every
+snapshot, whenever deadlines are armed (watchdog determinism), and
+before ``run`` returns — so every PR 6 fault-tolerance observable is
+settled when it is read.
 
 PR 6 makes the loop a *supervisor* (the serving twin of the trainer's
 1000-node posture): one bad request can no longer take down the other
@@ -52,9 +65,12 @@ list as ``results[uid]``).
 from __future__ import annotations
 
 import dataclasses
+import os
+import queue as queue_mod
 import signal
 import threading
 import time
+import zlib
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -64,6 +80,26 @@ from repro.serving_engine.engine import Engine
 
 #: terminal request states; anything else is pending/in-flight
 TERMINAL = ("ok", "error", "expired")
+
+_ENV_PACK = "REPRO_PREFILL_PACK"
+_ENV_DETOK = "REPRO_DETOK_ASYNC"
+
+
+def default_prefill_pack() -> int:
+    v = os.environ.get(_ENV_PACK)
+    if v is None or v == "":
+        return 4
+    p = int(v)
+    if p < 1:
+        raise ValueError(f"{_ENV_PACK}={p} must be >= 1")
+    return p
+
+
+def default_detok_async() -> bool:
+    v = os.environ.get(_ENV_DETOK)
+    if v is None or v == "":
+        return True
+    return v.strip().lower() not in ("0", "false", "off", "no")
 
 
 class QueueFull(RuntimeError):
@@ -86,6 +122,15 @@ class Request:
     eos_id: Optional[int] = None  # stop token (None = run to max_new)
     on_token: Optional[Callable[[str, int], None]] = None  # streaming cb
     deadline: Optional[float] = None  # TTL seconds from submit (None = ∞)
+    seed: Optional[int] = None    # sampling seed (None = derived from uid)
+
+    def resolved_seed(self) -> int:
+        """Effective sampling seed: explicit, else a stable uid hash so
+        two requests with the same prompt still sample distinct streams
+        (and a snapshot-resumed request replays the same one)."""
+        if self.seed is not None:
+            return int(self.seed)
+        return zlib.crc32(self.uid.encode()) & 0x7FFFFFFF
 
 
 @dataclasses.dataclass
@@ -102,6 +147,77 @@ def _errmsg(e: BaseException) -> str:
     return f"{type(e).__name__}: {e}"
 
 
+class _DetokWorker:
+    """Background detokenise/callback pipeline (the JetThread role in
+    MaxText's offline inference): a single daemon thread drains a
+    bounded FIFO of (request, token) pairs and invokes ``on_token``
+    callbacks off the decode hot loop.
+
+    * **Ordering** — one worker, one FIFO: callbacks fire in exactly the
+      emit order, same as the old synchronous path.
+    * **Backpressure** — the queue is bounded; when callbacks fall
+      behind, ``put`` blocks the scheduler loop instead of buffering
+      unboundedly.
+    * **Detach-on-raise** — a raising callback (or injected callback
+      fault) is detached on the worker: ``req.on_token`` is cleared so
+      queued/later tokens for that request are skipped, and the outcome
+      records ``callback_error`` — identical observables to PR 6's
+      synchronous isolation boundary.
+    * **drain()** — blocks until every queued callback has completed;
+      the scheduler drains before watchdog reads when deadlines are
+      armed (callbacks may advance an injected clock), before every
+      snapshot, and when ``run`` returns, so outcomes are settled at
+      each synchronisation point.
+    """
+
+    _STOP = object()
+
+    def __init__(self, sched: "Scheduler", cap: int):
+        self._sched = sched
+        self._q: queue_mod.Queue = queue_mod.Queue(maxsize=cap)
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(
+            target=self._loop, name="detok-worker", daemon=True)
+        self._thread.start()
+
+    def put(self, req: Request, token: int):
+        self._q.put((req, token))       # blocks when full: backpressure
+
+    def drain(self):
+        self._q.join()
+
+    def stop(self):
+        if self._thread is None:
+            return
+        self._q.put(self._STOP)
+        self._thread.join()
+        self._thread = None
+
+    def _loop(self):
+        sched = self._sched
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._STOP:
+                    return
+                req, token = item
+                if req.on_token is None:    # detached mid-queue: skip
+                    continue
+                try:
+                    if sched.injector is not None:
+                        sched.injector.callback(req.uid)
+                    req.on_token(req.uid, token)
+                except Exception as e:  # noqa: BLE001 — isolation boundary
+                    req.on_token = None
+                    sched.outcomes[req.uid].callback_error = _errmsg(e)
+                    sched.log(f"[scheduler] request {req.uid}: on_token "
+                              f"raised, callback detached ({_errmsg(e)})")
+            finally:
+                self._q.task_done()
+
+
 class Scheduler:
     def __init__(self, engine: Engine, *,
                  queue_cap: Optional[int] = None,
@@ -112,6 +228,9 @@ class Scheduler:
                  injector=None,
                  snapshot_dir: Optional[str] = None,
                  snapshot_every: int = 0,
+                 prefill_pack: Optional[int] = None,
+                 detok_async: Optional[bool] = None,
+                 detok_cap: int = 1024,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  log: Optional[Callable[[str], None]] = None):
@@ -120,6 +239,8 @@ class Scheduler:
                              "expected 'reject' or 'block'")
         if queue_cap is not None and queue_cap < 1:
             raise ValueError(f"queue_cap={queue_cap} must be >= 1")
+        if detok_cap < 1:
+            raise ValueError(f"detok_cap={detok_cap} must be >= 1")
         self.engine = engine
         self.queue: deque = deque()
         self.queue_cap = queue_cap
@@ -130,6 +251,15 @@ class Scheduler:
         self.injector = injector
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = int(snapshot_every)
+        self.prefill_pack = (default_prefill_pack() if prefill_pack is None
+                             else int(prefill_pack))
+        if self.prefill_pack < 1:
+            raise ValueError(
+                f"prefill_pack={self.prefill_pack} must be >= 1")
+        self.detok_async = (default_detok_async() if detok_async is None
+                            else bool(detok_async))
+        self.detok_cap = int(detok_cap)
+        self._detok: Optional[_DetokWorker] = None
         self.clock = clock
         self.sleep = sleep
         self.log = log or (lambda msg: None)
@@ -140,6 +270,7 @@ class Scheduler:
         self._not_full = threading.Condition(self._lock)
         self.steps = 0                # decode steps taken (stats)
         self.prefills = 0
+        self.packed_prefills = 0      # packed admission batches run
         self.retries = 0              # transient-fault retries performed
         self.evictions = 0            # deadline/non-finite evictions
         self.snapshot_errors = 0
@@ -205,6 +336,15 @@ class Scheduler:
             self._not_full.notify()
             return req
 
+    def _pop_up_to(self, n: int) -> List[Request]:
+        """Pop at most n queued requests (FIFO) for one admission wave."""
+        out: List[Request] = []
+        with self._not_full:
+            while self.queue and len(out) < n:
+                out.append(self.queue.popleft())
+                self._not_full.notify()
+        return out
+
     # ------------------------------------------------------------ signals
     def _install_signals(self):
         self._old_handlers = {}
@@ -240,23 +380,33 @@ class Scheduler:
 
     def _emit(self, req: Request, token: int) -> bool:
         """Record/stream one token; returns True when the request is done
-        (EOS or budget exhausted). A raising callback (or an injected
-        callback fault) is detached and noted — never unwinds the loop."""
+        (EOS or budget exhausted). Bookkeeping (results, done check) is
+        synchronous; the ``on_token`` callback is handed to the detok
+        worker when one is live, else invoked inline. A raising callback
+        (or an injected callback fault) is detached and noted — never
+        unwinds the loop."""
         self.results[req.uid].append(token)
         if req.on_token is not None:
-            try:
-                if self.injector is not None:
-                    self.injector.callback(req.uid)
-                req.on_token(req.uid, token)
-            except Exception as e:      # noqa: BLE001 — isolation boundary
-                req.on_token = None
-                self.outcomes[req.uid].callback_error = _errmsg(e)
-                self.log(f"[scheduler] request {req.uid}: on_token raised, "
-                         f"callback detached ({_errmsg(e)})")
+            if self._detok is not None:
+                self._detok.put(req, token)
+            else:
+                try:
+                    if self.injector is not None:
+                        self.injector.callback(req.uid)
+                    req.on_token(req.uid, token)
+                except Exception as e:  # noqa: BLE001 — isolation boundary
+                    req.on_token = None
+                    self.outcomes[req.uid].callback_error = _errmsg(e)
+                    self.log(f"[scheduler] request {req.uid}: on_token "
+                             f"raised, callback detached ({_errmsg(e)})")
         done = len(self.results[req.uid]) >= req.max_new
         if req.eos_id is not None and token == req.eos_id:
             done = True
         return done
+
+    def _drain_detok(self):
+        if self._detok is not None:
+            self._detok.drain()
 
     # ----------------------------------------------------------- watchdog
     def _expire_queue(self, now: float):
@@ -306,7 +456,8 @@ class Scheduler:
             try:
                 if self.injector is not None:
                     self.injector.prefill(req.uid)
-                return self.engine.prefill(req.prompt)
+                return self.engine.prefill(req.prompt,
+                                           seed=req.resolved_seed())
             except RuntimeError as e:
                 if attempt >= self.max_retries:
                     raise
@@ -332,12 +483,107 @@ class Scheduler:
             free.append(slot)
             return state
         try:
-            state = self.engine.insert(state, prefix, plen, tok, slot)
+            state = self.engine.insert(state, prefix, plen, tok, slot,
+                                       seed=req.resolved_seed())
         except Exception as e:          # noqa: BLE001 — isolation boundary
             self._finish(req.uid, "error", f"insert failed: {_errmsg(e)}")
             free.append(slot)
             return state
         slot_req[slot] = req
+        return state
+
+    def _gate_with_retry(self, req: Request) -> bool:
+        """Run only the injector's prefill gate for one request of a
+        packed batch (the engine call is shared — per-uid faults must
+        still fail per-request). Returns False (error outcome recorded)
+        when the gate fails persistently."""
+        if self.injector is None:
+            return True
+        for attempt in range(self.max_retries + 1):
+            try:
+                self.injector.prefill(req.uid)
+                return True
+            except RuntimeError as e:
+                if attempt >= self.max_retries:
+                    self._finish(req.uid, "error",
+                                 f"prefill failed: {_errmsg(e)}")
+                    return False
+                self.log(f"[scheduler] prefill {req.uid} attempt {attempt} "
+                         f"failed ({_errmsg(e)}); retrying")
+                self._backoff(attempt)
+        return False                     # unreachable
+
+    def _admit_packed(self, reqs: List[Request], state,
+                      slot_req: Dict[int, Request], free: List[int]):
+        """Admit several requests through ONE packed batch prefill.
+        Per-request isolation is preserved: the injector gate runs (and
+        retries) per uid before the shared engine call; a persistent
+        engine-side failure fails only the packed survivors; insert
+        failures fail only their own row."""
+        survivors = [r for r in reqs if self._gate_with_retry(r)]
+        if not survivors:
+            return state
+        prompts = [r.prompt for r in survivors]
+        seeds = [r.resolved_seed() for r in survivors]
+        packed = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                packed, first, plens = self.engine.prefill_packed(
+                    prompts, seeds)
+                break
+            except RuntimeError as e:
+                if attempt >= self.max_retries:
+                    for r in survivors:
+                        self._finish(r.uid, "error",
+                                     f"prefill failed: {_errmsg(e)}")
+                    return state
+                self.log(f"[scheduler] packed prefill ({len(survivors)} "
+                         f"reqs) attempt {attempt} failed ({_errmsg(e)}); "
+                         "retrying")
+                self._backoff(attempt)
+            except Exception as e:      # noqa: BLE001 — isolation boundary
+                for r in survivors:
+                    self._finish(r.uid, "error",
+                                 f"prefill failed: {_errmsg(e)}")
+                return state
+        self.packed_prefills += 1
+        first_h = np.asarray(first)      # host sync: first-token stream
+        for row, req in enumerate(survivors):
+            self.prefills += 1
+            tok = int(first_h[row])
+            if self._emit(req, tok):     # 1-token request: done
+                self._finish(req.uid, "ok")
+                continue
+            slot = free.pop()
+            try:
+                state = self.engine.insert_from(
+                    state, packed, row, plens[row], tok, slot,
+                    seed=seeds[row])
+            except Exception as e:      # noqa: BLE001 — isolation boundary
+                self._finish(req.uid, "error",
+                             f"insert failed: {_errmsg(e)}")
+                free.append(slot)
+                continue
+            slot_req[slot] = req
+        return state
+
+    def _admit_batch(self, reqs: List[Request], state,
+                     slot_req: Dict[int, Request], free: List[int]):
+        """Route a wave of admissions: prompts on the bucket ladder go
+        through the packed path together; off-ladder prompts (and a
+        wave of one) use the sequential b=1 path."""
+        packable: List[Request] = []
+        rest: List[Request] = []
+        for r in reqs:
+            p = int(np.asarray(r.prompt).shape[-1])
+            (packable if self.engine.bucket_for(p) is not None
+             else rest).append(r)
+        if len(packable) >= 2:
+            state = self._admit_packed(packable, state, slot_req, free)
+        else:
+            rest = reqs
+        for req in rest:
+            state = self._admit(req, state, slot_req, free)
         return state
 
     def _generate_with_retry(self, state, slot_req: Dict[int, Request],
@@ -383,6 +629,9 @@ class Scheduler:
         if self.snapshot_dir is None:
             return
         from repro.serving_engine import snapshot as snap
+        # settle in-flight callbacks first: a snapshot must capture
+        # callback_error/detach outcomes that are already "emitted"
+        self._drain_detok()
         try:
             if self.injector is not None:
                 self.injector.snapshot(self.steps)
@@ -433,11 +682,16 @@ class Scheduler:
         return True
 
     # --------------------------------------------------------------- run
-    def run(self, state=None):
+    def run(self, state=None, *, stop: Optional[Callable[[], bool]] = None,
+            idle_sleep: float = 0.002):
         """Drain the queue; returns ({uid: [generated tokens]}, state).
         Reentrant: pass the returned state back in to keep serving. When
         preempted (SIGTERM/SIGINT or :meth:`preempt`) it snapshots and
-        returns early with ``self.preempted`` set."""
+        returns early with ``self.preempted`` set. With ``stop`` given,
+        an empty queue idles (sleeping ``idle_sleep`` between polls)
+        instead of returning, until ``stop()`` is truthy — the
+        online-serving mode used by the latency benchmark's open-loop
+        arrival process."""
         eng = self.engine
         resume, self._resume = self._resume, None
         if resume is not None:
@@ -452,19 +706,33 @@ class Scheduler:
             slot_req = {}
         self.preempted = False
         self._install_signals()
+        if self.detok_async and self._detok is None:
+            self._detok = _DetokWorker(self, self.detok_cap)
+            self._detok.start()
         try:
             while True:
                 with self._lock:
                     has_queue = bool(self.queue)
-                if self.preempted or not (has_queue or slot_req):
+                if self.preempted:
                     break
+                if not (has_queue or slot_req):
+                    if stop is None or stop():
+                        break
+                    self.sleep(idle_sleep)           # idle: await arrivals
+                    continue
+                if self._deadlines:
+                    # callbacks may advance an injected clock — settle
+                    # them before the watchdog reads it
+                    self._drain_detok()
                 now = self.clock()
                 self._expire_queue(now)              # watchdog: queue TTLs
                 state = self._expire_slots(now, state, slot_req, free)
                 if free:                             # greedy prefill-first
-                    req = self._pop_request()
-                    if req is not None:
-                        state = self._admit(req, state, slot_req, free)
+                    wave = self._pop_up_to(min(len(free),
+                                               self.prefill_pack))
+                    if wave:
+                        state = self._admit_batch(wave, state, slot_req,
+                                                  free)
                         continue
                 if not slot_req:
                     continue     # everything expired/errored; re-check queue
@@ -498,5 +766,11 @@ class Scheduler:
             if self.preempted:
                 self._snapshot(state, slot_req, free, final=True)
         finally:
+            if self._detok is not None:
+                # settle every in-flight callback before handing results
+                # back (streamed == recorded is a PR 6 observable)
+                self._detok.drain()
+                self._detok.stop()
+                self._detok = None
             self._restore_signals()
         return self.results, state

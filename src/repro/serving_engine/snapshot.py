@@ -41,6 +41,9 @@ def request_meta(req) -> Dict[str, Any]:
         "prompt": np.asarray(req.prompt).astype(np.int64).tolist(),
         "max_new": int(req.max_new),
         "eos_id": None if req.eos_id is None else int(req.eos_id),
+        # explicit sampling seed only; a None seed re-derives from the
+        # uid on restore, which is stable by construction
+        "seed": None if req.seed is None else int(req.seed),
     }
 
 
@@ -53,6 +56,7 @@ def meta_request(meta: Dict[str, Any], callbacks: Optional[Dict] = None):
         max_new=int(meta["max_new"]),
         eos_id=meta["eos_id"],
         on_token=(callbacks or {}).get(uid),
+        seed=meta.get("seed"),
     )
 
 

@@ -15,7 +15,13 @@ decode assumes the same shape):
 * ``tokens``  — (S,) last emitted token per slot (next step's input);
 * ``active``  — (S,) liveness mask: inactive slots are frozen (their
   cur_len/tokens don't advance; their cache rows are scratch until the
-  next insert overwrites them).
+  next insert overwrites them);
+* ``rng``     — (S, 2) uint32 per-slot PRNG lanes for sampled decode.
+  Each slot's key is seeded at insert from the request's seed and split
+  once per *advancing* step, so a request's sampled stream depends only
+  on (params, prompt, seed, temperature) — never on its neighbours, the
+  slot index, or how many engine steps happened before admission. Greedy
+  engines carry the field untouched (zeros).
 
 ``insert_prefix_cache`` tree-maps a chunk-prefilled batch-1 cache into
 one slot of the live batch with ``dynamic_update_slice`` along each
@@ -59,7 +65,8 @@ SHARED_LEAVES = frozenset(
 
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("cache", "cur_len", "tokens", "active"),
+                   data_fields=("cache", "cur_len", "tokens", "active",
+                                "rng"),
                    meta_fields=())
 @dataclasses.dataclass
 class DecodeState:
@@ -67,6 +74,7 @@ class DecodeState:
     cur_len: jax.Array  # (S,) int32 — next write position per slot
     tokens: jax.Array   # (S,) int32 — last emitted token per slot
     active: jax.Array   # (S,) bool  — slot liveness
+    rng: jax.Array      # (S, 2) uint32 — per-slot sampling key lanes
 
     @property
     def slots(self) -> int:
@@ -84,7 +92,66 @@ def init_decode_state(cfg, params, slots: int, max_len: int,
         cur_len=jnp.zeros((slots,), jnp.int32),
         tokens=jnp.zeros((slots,), jnp.int32),
         active=jnp.zeros((slots,), bool),
+        rng=jnp.zeros((slots, 2), jnp.uint32),
     )
+
+
+def _leaf_name(path) -> str:
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    return names[-1] if names else ""
+
+
+def _classify(leaf: str):
+    """Batch-axis offset (from the end) of a per-slot leaf, or None for a
+    shared one. Unknown names raise — see SHARED_LEAVES."""
+    off = BATCH_AXIS_FROM_END.get(leaf)
+    if off is None and leaf not in SHARED_LEAVES:
+        raise NotImplementedError(
+            f"cache leaf {leaf!r} is not classified as per-slot "
+            "(BATCH_AXIS_FROM_END) or shared (SHARED_LEAVES); "
+            "add it before serving this cache through the engine")
+    return off
+
+
+def select_rows(take, new_cache, old_cache):
+    """Per-row cache merge: batch row b of the result is ``new_cache``'s
+    row where ``take[b]`` else ``old_cache``'s. This is the masked-update
+    primitive of packed batch prefill — every row steps through the same
+    jitted chunk/token op, but rows whose prompt ended earlier keep their
+    already-final cache instead of absorbing pad-token writes. Shared
+    parameter-derived leaves take the new side (they are identical on
+    both by construction)."""
+    take = jnp.asarray(take, bool)
+
+    def f(path, new, old):
+        off = _classify(_leaf_name(path))
+        if off is None:
+            return new                   # shared constant leaf
+        ax = new.ndim - off
+        shape = tuple(take.shape[0] if i == ax else 1
+                      for i in range(new.ndim))
+        return jnp.where(take.reshape(shape), new, old)
+    return jax.tree_util.tree_map_with_path(f, new_cache, old_cache)
+
+
+def take_row(packed_cache, row):
+    """Slice batch row ``row`` (kept, size 1) out of a packed prefill
+    cache, producing the batch-1 prefix tree :func:`insert_prefix_cache`
+    expects. ``row`` may be traced — one jit trace serves every row.
+    Shared leaves pass through whole."""
+    row = jnp.asarray(row, jnp.int32)
+
+    def f(path, leaf):
+        off = _classify(_leaf_name(path))
+        if off is None:
+            return leaf
+        ax = leaf.ndim - off
+        starts = [jnp.int32(0)] * leaf.ndim
+        starts[ax] = row
+        sizes = tuple(1 if i == ax else s
+                      for i, s in enumerate(leaf.shape))
+        return jax.lax.dynamic_slice(leaf, tuple(starts), sizes)
+    return jax.tree_util.tree_map_with_path(f, packed_cache)
 
 
 def insert_prefix_cache(batched_cache, prefix_cache, slot):
@@ -92,15 +159,8 @@ def insert_prefix_cache(batched_cache, prefix_cache, slot):
     cache (traced slot index — one jit trace serves every slot). Shared
     (non-per-slot) leaves keep the batched side's value."""
     def f(path, dst, src):
-        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
-        leaf = names[-1] if names else ""
-        off = BATCH_AXIS_FROM_END.get(leaf)
+        off = _classify(_leaf_name(path))
         if off is None:
-            if leaf not in SHARED_LEAVES:
-                raise NotImplementedError(
-                    f"cache leaf {leaf!r} is not classified as per-slot "
-                    "(BATCH_AXIS_FROM_END) or shared (SHARED_LEAVES); "
-                    "add it before serving this cache through the engine")
             return dst                       # shared constant leaf
         ax = dst.ndim - off
         starts = [jnp.int32(0)] * dst.ndim
@@ -111,17 +171,23 @@ def insert_prefix_cache(batched_cache, prefix_cache, slot):
 
 
 def insert(state: DecodeState, prefix_cache, slot, cur_len,
-           token) -> DecodeState:
+           token, key=None) -> DecodeState:
     """Admit a prefilled request into ``slot``: slice its cache row in,
     set the slot's position to the prefix length, seed the first decode
     input with the prefill's sampled token, and mark the slot live.
-    ``slot`` / ``cur_len`` / ``token`` may all be traced."""
+    ``key`` (uint32 (2,)) seeds the slot's sampling lane; None leaves the
+    previous occupant's lane bits (greedy engines never read them).
+    ``slot`` / ``cur_len`` / ``token`` / ``key`` may all be traced."""
     slot = jnp.asarray(slot, jnp.int32)
+    rng = state.rng
+    if key is not None:
+        rng = rng.at[slot].set(jnp.asarray(key, jnp.uint32))
     return DecodeState(
         cache=insert_prefix_cache(state.cache, prefix_cache, slot),
         cur_len=state.cur_len.at[slot].set(jnp.asarray(cur_len, jnp.int32)),
         tokens=state.tokens.at[slot].set(jnp.asarray(token, jnp.int32)),
         active=state.active.at[slot].set(True),
+        rng=rng,
     )
 
 

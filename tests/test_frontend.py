@@ -1,0 +1,390 @@
+"""Scheduler front-end (ISSUE 7): bucketed/packed prefill, async
+detokenise, sampled decode, snapshot-with-worker.
+
+Contracts under test:
+* bucket ladder — geometric rungs, C-aligned, one ``prefill_bucket``
+  trace per (batch, bucket, n_tok) triple and NOT one per prompt length;
+* packed prefill — every row of a packed batch prefill is bitwise the
+  cache (and greedy first token) of a b=1 prefill of that prompt alone,
+  and scheduler-level packed admission is token-exact vs sequential;
+* async detok — callbacks preserve emit order through the worker, a
+  raising callback detaches without losing recorded tokens, and a
+  tiny-capacity queue (backpressure) still delivers every token;
+* sampled decode — seeded streams are reproducible and slot-placement
+  independent; T=0 with seeds attached is bit-equal to greedy;
+* snapshot/restore — preempting from the worker thread itself still
+  yields a token-exact resume (the snapshot drains the worker first).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models.transformer import init_model
+from repro.nn.params import unbox
+from repro.serving_engine import Engine, Request, Scheduler
+from repro.serving_engine.state import BATCH_AXIS_FROM_END, take_row
+
+ARCH = "fd-tnn-lm-wt103"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config(ARCH), dtype="float32",
+                           param_dtype="float32")
+    params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _stream_c(monkeypatch):
+    monkeypatch.setenv("REPRO_FD_STREAM_C", "4")
+
+
+def _prompts(cfg, plens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (p,)).astype(np.int32)
+            for p in plens]
+
+
+# ------------------------------------------------------- bucket ladder
+def test_bucket_ladder_shape(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=1, max_len=16, bucket0=4)
+    assert eng.buckets == [4, 8, 16]
+    assert eng.bucket_for(1) == 4 and eng.bucket_for(4) == 4
+    assert eng.bucket_for(5) == 8 and eng.bucket_for(16) == 16
+    # bucket0 is rounded up to the stream block C
+    assert Engine(cfg, params, slots=1, max_len=16,
+                  bucket0=3).buckets == [4, 8, 16]
+    # disabled ladder: everything is off-bucket (per-length fallback)
+    off = Engine(cfg, params, slots=1, max_len=16, use_buckets=False)
+    assert off.bucket_for(4) is None
+
+
+def test_prefill_retraces_per_bucket_not_per_length(setup):
+    """Ragged lengths inside one bucket share ONE executable; only a
+    bucket change (or the aligned fast path n_tok=0) compiles again."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=1, max_len=16, bucket0=4)
+    for p in (2, 3):                     # same (B=1, Lb=4, n_tok=4)
+        eng.prefill(_prompts(cfg, [p], seed=p)[0])
+    assert eng.trace_counts["prefill_bucket"] == 1, eng.trace_counts
+    eng.prefill(_prompts(cfg, [4])[0])   # aligned fast path: n_tok=0
+    assert eng.trace_counts["prefill_bucket"] == 2, eng.trace_counts
+    for p in (5, 6, 7):                  # next rung (B=1, Lb=8, n_tok=4)
+        eng.prefill(_prompts(cfg, [p], seed=p)[0])
+    assert eng.trace_counts["prefill_bucket"] == 3, eng.trace_counts
+    # the per-length fallback stayed cold: bucketed prompts never touch it
+    assert eng.trace_counts["decode1"] == 0, eng.trace_counts
+    assert eng.trace_counts["chunk1"] == 0, eng.trace_counts
+
+
+def test_packed_prefill_traces_once_per_batch_size(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=4, max_len=16, bucket0=4)
+    for seed in (0, 1):                  # two packs, same (B=3, Lb=8, n_tok=4)
+        eng.prefill_packed(_prompts(cfg, [3, 6, 5], seed=seed))
+    assert eng.trace_counts["prefill_bucket"] == 1, eng.trace_counts
+    eng.prefill_packed(_prompts(cfg, [2, 3], seed=2))   # B=2: new executable
+    assert eng.trace_counts["prefill_bucket"] == 2, eng.trace_counts
+
+
+# ------------------------------------------------- packed prefill parity
+def test_packed_rows_bitwise_equal_b1_prefill(setup):
+    """Row i of prefill_packed == a b=1 prefill of prompt i alone: same
+    greedy first token AND bitwise-identical per-slot cache leaves."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=4, max_len=16, bucket0=4)
+    prompts = _prompts(cfg, [3, 6, 5, 8], seed=7)   # ragged + one aligned
+    packed, first, plens = eng.prefill_packed(prompts)
+    first = np.asarray(first)
+    for i, pr in enumerate(prompts):
+        solo_cache, solo_first, _ = eng.prefill(pr)
+        assert first[i] == int(solo_first), i
+        row = take_row(packed, i)
+
+        def check(path, a, b, i=i):
+            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if BATCH_AXIS_FROM_END.get(names[-1] if names else "") is None:
+                return a                  # shared constant leaf
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"row {i} leaf {names[-1]}")
+            return a
+        jax.tree_util.tree_map_with_path(check, row, solo_cache)
+
+
+def test_scheduler_packed_admission_token_exact(setup):
+    """End-to-end: packed admission (prefill_pack=4) produces the exact
+    token streams of sequential b=1 admission (prefill_pack=1)."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 7, 5, 9, 4, 6], seed=11)
+    gens = [8, 5, 10, 6, 7, 9]
+
+    def serve(pack):
+        eng = Engine(cfg, params, slots=4, max_len=32)
+        sched = Scheduler(eng, prefill_pack=pack)
+        for i, (pr, g) in enumerate(zip(prompts, gens)):
+            sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=g))
+        res, _ = sched.run()
+        return res, sched
+
+    packed_res, packed_sched = serve(4)
+    seq_res, seq_sched = serve(1)
+    assert packed_sched.packed_prefills >= 1
+    assert seq_sched.packed_prefills == 0
+    assert packed_res == seq_res
+
+
+def test_off_ladder_prompts_fall_back_to_sequential(setup):
+    """With bucketing disabled every admission takes the per-length
+    loop; results still match the bucketed engine exactly."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 6, 5], seed=13)
+
+    def serve(**kw):
+        eng = Engine(cfg, params, slots=4, max_len=24, **kw)
+        sched = Scheduler(eng)
+        for i, pr in enumerate(prompts):
+            sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=6))
+        res, _ = sched.run()
+        return res, eng, sched
+
+    res_b, eng_b, _ = serve()
+    res_o, eng_o, sched_o = serve(use_buckets=False)
+    assert res_b == res_o
+    assert eng_b.trace_counts["prefill_bucket"] >= 1
+    assert eng_o.trace_counts["prefill_bucket"] == 0
+    assert sched_o.packed_prefills == 0          # nothing was packable
+
+
+# ----------------------------------------------------------- async detok
+def test_detok_ordering_and_detach_on_raise(setup):
+    """Callbacks fire in emit order through the worker; a raising
+    callback is detached (callback_error) without losing the request's
+    recorded tokens or disturbing its neighbours."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 5, 4], seed=17)
+    order, streamed = [], {}
+
+    def good(uid, tok):
+        order.append((uid, tok))
+        streamed.setdefault(uid, []).append(tok)
+
+    def bad(uid, tok):
+        streamed.setdefault(uid, []).append(tok)
+        if len(streamed[uid]) == 3:
+            raise RuntimeError("client hung up")
+
+    eng = Engine(cfg, params, slots=3, max_len=24)
+    sched = Scheduler(eng, detok_async=True)
+    sched.submit(Request(uid="a", prompt=prompts[0], max_new=8,
+                         on_token=good))
+    sched.submit(Request(uid="b", prompt=prompts[1], max_new=8,
+                         on_token=bad))
+    sched.submit(Request(uid="c", prompt=prompts[2], max_new=8,
+                         on_token=good))
+    res, _ = sched.run()
+
+    assert sched.outcomes["b"].callback_error is not None
+    assert "client hung up" in sched.outcomes["b"].callback_error
+    assert sched.outcomes["b"].status == "ok"    # stream kept recording
+    assert len(res["b"]) == 8
+    assert streamed["b"] == res["b"][:3]         # detached after the raise
+    for uid in ("a", "c"):
+        assert sched.outcomes[uid].status == "ok"
+        assert streamed[uid] == res[uid]
+        # per-uid callback order is the emit order
+        assert [t for u, t in order if u == uid] == res[uid]
+
+
+def test_detok_backpressure_tiny_queue(setup):
+    """detok_cap=1 with a slow callback: the scheduler blocks on put
+    instead of buffering unboundedly, and still delivers every token in
+    order by the time run() returns (exit drain)."""
+    import time as _time
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 4], seed=19)
+    streamed = {}
+
+    def slow(uid, tok):
+        _time.sleep(0.001)
+        streamed.setdefault(uid, []).append(tok)
+
+    eng = Engine(cfg, params, slots=2, max_len=24)
+    sched = Scheduler(eng, detok_async=True, detok_cap=1)
+    for i, pr in enumerate(prompts):
+        sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=10,
+                             on_token=slow))
+    res, _ = sched.run()
+    for i in range(2):
+        assert streamed[f"r{i}"] == res[f"r{i}"], i
+
+
+def test_detok_sync_mode_still_works(setup):
+    """detok_async=False is the PR 6 inline path — same observables."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3], seed=23)
+    streamed = []
+    eng = Engine(cfg, params, slots=1, max_len=16)
+    sched = Scheduler(eng, detok_async=False)
+    sched.submit(Request(uid="r0", prompt=prompts[0], max_new=6,
+                         on_token=lambda u, t: streamed.append(t)))
+    res, _ = sched.run()
+    assert streamed == res["r0"]
+
+
+# --------------------------------------------------------- sampled decode
+def test_sampled_seeded_reproducible_and_placement_independent(setup):
+    """Same request seeds → identical sampled streams, run to run AND
+    across different slot counts / submission orders (the key lanes
+    derive from the request seed, never from slot placement)."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 6, 5, 4], seed=29)
+    seeds = [101, 202, 303, 404]
+
+    def serve(slots, order):
+        eng = Engine(cfg, params, slots=slots, max_len=24,
+                     temperature=0.7, top_k=8)
+        sched = Scheduler(eng)
+        for i in order:
+            sched.submit(Request(uid=f"r{i}", prompt=prompts[i],
+                                 max_new=7, seed=seeds[i]))
+        res, _ = sched.run()
+        return res
+
+    a = serve(2, [0, 1, 2, 3])
+    b = serve(2, [0, 1, 2, 3])           # rerun: bitwise reproducible
+    c = serve(4, [3, 1, 0, 2])           # different placement
+    assert a == b
+    assert a == c
+    # distinct seeds actually decorrelate (same prompt, two seeds)
+    eng = Engine(cfg, params, slots=2, max_len=24, temperature=0.9)
+    sched = Scheduler(eng)
+    sched.submit(Request(uid="x", prompt=prompts[0], max_new=12, seed=1))
+    sched.submit(Request(uid="y", prompt=prompts[0], max_new=12, seed=2))
+    res, _ = sched.run()
+    assert res["x"] != res["y"]
+
+
+def test_sampled_t0_equals_greedy(setup):
+    """temperature=0 with request seeds attached is bit-equal to the
+    greedy engine: seeds are inert outside the sampling branch."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 6], seed=31)
+
+    def serve(**eng_kw):
+        eng = Engine(cfg, params, slots=2, max_len=24, **eng_kw)
+        sched = Scheduler(eng)
+        for i, pr in enumerate(prompts):
+            sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=9,
+                                 seed=555 + i))
+        res, _ = sched.run()
+        return res
+
+    assert serve(temperature=0.0) == serve()
+
+
+def test_sampled_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="temperature"):
+        Engine(cfg, params, slots=1, max_len=16, temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        Engine(cfg, params, slots=1, max_len=16, top_k=-1)
+
+
+# ------------------------------------------------ snapshot + worker live
+def test_snapshot_restore_with_worker_live(setup, tmp_path):
+    """Preempt mid-run FROM the detok worker thread (the callback calls
+    preempt()), restore in a fresh scheduler, and the union of streamed
+    tokens across both runs is exactly the uninterrupted baseline —
+    the final snapshot drains the worker before capturing."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 5, 4], seed=37)
+    gens = [10, 8, 12]
+
+    def fleet(cbs):
+        return [Request(uid=f"r{i}", prompt=pr, max_new=g,
+                        on_token=cbs.get(f"r{i}"))
+                for i, (pr, g) in enumerate(zip(prompts, gens))]
+
+    # uninterrupted baseline
+    sched = Scheduler(Engine(cfg, params, slots=2, max_len=24))
+    for r in fleet({}):
+        sched.submit(r)
+    baseline, _ = sched.run()
+
+    streamed1 = {}
+    sched1 = Scheduler(Engine(cfg, params, slots=2, max_len=24),
+                       snapshot_dir=str(tmp_path), snapshot_every=2,
+                       detok_async=True)
+
+    def cb1(uid, tok):
+        streamed1.setdefault(uid, []).append(tok)
+        if sum(map(len, streamed1.values())) == 9:
+            sched1.preempt()             # from the worker thread
+
+    for r in fleet({u: cb1 for u in ("r0", "r1", "r2")}):
+        sched1.submit(r)
+    sched1.run()
+    assert sched1.preempted
+    partial = sum(map(len, sched1.results.values()))
+    assert partial < sum(map(len, baseline.values()))
+
+    streamed2 = {}
+
+    def cb2(uid, tok):
+        streamed2.setdefault(uid, []).append(tok)
+
+    sched2 = Scheduler(Engine(cfg, params, slots=2, max_len=24),
+                       snapshot_dir=str(tmp_path), detok_async=True)
+    assert sched2.try_restore(
+        callbacks={u: cb2 for u in ("r0", "r1", "r2")})
+    resumed, _ = sched2.run()
+    for uid in baseline:
+        assert sched2.outcomes[uid].status == "ok"
+        assert resumed[uid] == baseline[uid], uid
+        # every token streamed exactly once across the two runs
+        assert (streamed1.get(uid, []) + streamed2.get(uid, [])
+                == baseline[uid]), uid
+
+
+def test_request_seed_snapshot_roundtrip(setup, tmp_path):
+    """A queued sampled request's seed survives snapshot/restore: the
+    resumed stream equals the uninterrupted one."""
+    cfg, params = setup
+    prompts = _prompts(cfg, [3, 4], seed=41)
+
+    def fleet():
+        return [Request(uid=f"r{i}", prompt=pr, max_new=8, seed=777 + i)
+                for i, pr in enumerate(prompts)]
+
+    def engine():
+        return Engine(cfg, params, slots=1, max_len=16, temperature=0.8)
+
+    sched = Scheduler(engine())
+    for r in fleet():
+        sched.submit(r)
+    baseline, _ = sched.run()
+
+    counter = {"n": 0}
+    sched1 = Scheduler(engine(), snapshot_dir=str(tmp_path),
+                       snapshot_every=1)
+
+    def kill(uid, tok):
+        counter["n"] += 1
+        if counter["n"] == 3:
+            sched1.preempt()
+
+    for r in fleet():
+        r.on_token = kill
+        sched1.submit(r)
+    sched1.run()
+    assert sched1.preempted
+
+    sched2 = Scheduler(engine(), snapshot_dir=str(tmp_path))
+    assert sched2.try_restore()
+    resumed, _ = sched2.run()
+    assert resumed == baseline

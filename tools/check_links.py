@@ -1,0 +1,124 @@
+"""Intra-repo markdown link checker (CI docs gate).
+
+Scans README.md and docs/**/*.md for inline markdown links and fails
+when a *relative* link target does not exist, or when a ``#anchor``
+(same-file or cross-file) does not match any heading's GitHub-style
+slug. External links (http/https/mailto) are not fetched — this gate
+is about the repo's own docs never silently rotting.
+
+    python tools/check_links.py            # default file set
+    python tools/check_links.py FILE...    # explicit files
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# inline links: [text](target) — skips images' alt brackets fine since
+# ![alt](src) still yields (src), which we do want to check
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation except
+    ``-``/``_``, spaces become hyphens (each space, so ``a + b`` →
+    ``a--b`` once the ``+`` is dropped)."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # links
+    heading = heading.lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    out, seen, fenced = set(), {}, False
+    for line in path.read_text().splitlines():
+        if _CODE_FENCE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")   # duplicate headings
+    return out
+
+
+def links_of(path: pathlib.Path):
+    fenced = False
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if _CODE_FENCE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        for m in _LINK.finditer(line):
+            yield i, m.group(1)
+
+
+def check(files) -> int:
+    errors = []
+    anchor_cache = {}
+
+    def anchors(p: pathlib.Path):
+        if p not in anchor_cache:
+            anchor_cache[p] = anchors_of(p)
+        return anchor_cache[p]
+
+    for f in files:
+        for line_no, target in links_of(f):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # scheme: external
+                continue
+            try:
+                where = f"{f.relative_to(ROOT)}:{line_no}"
+            except ValueError:
+                where = f"{f}:{line_no}"
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target == "":
+                dest = f                                   # same-file anchor
+            else:
+                dest = (f.parent / target).resolve()
+                if not dest.exists():
+                    errors.append(f"{where}: broken link -> {target}")
+                    continue
+            if frag is not None:
+                if dest.is_dir() or dest.suffix.lower() not in (".md",):
+                    continue                               # e.g. file.py#L10
+                if frag not in anchors(dest):
+                    errors.append(
+                        f"{where}: broken anchor -> "
+                        f"{target or dest.name}#{frag}")
+    for e in errors:
+        print(e)
+    print(f"[check_links] {len(files)} files, "
+          f"{'FAIL: ' + str(len(errors)) + ' broken' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("**/*.md"))
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        for f in missing:
+            print(f"no such file: {f}")
+        return 1
+    return check(files)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
