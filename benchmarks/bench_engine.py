@@ -1,6 +1,6 @@
-"""Continuous-batching engine throughput + latency (ISSUEs 5, 7).
+"""Continuous-batching engine throughput + latency (ISSUEs 5, 7, 9).
 
-Three sections, all landing in BENCH_engine.json:
+Four sections, all landing in BENCH_engine.json:
 
 * ``results`` — aggregate decode tok/s of the slot-based engine
   (repro.serving_engine) vs *sequential* single-request serving
@@ -24,6 +24,10 @@ Three sections, all landing in BENCH_engine.json:
   (prefill_pack=4) vs the sequential b=1 admission loop
   (prefill_pack=1) at S=16, same bucketed executables both sides. CI
   gate: packed ≥ 1.5x.
+* ``obs`` — observability overhead at S=16: the identical engine drain
+  with the metrics registry + span tracer (JSONL streaming to disk)
+  enabled vs disabled. CI gate: ``overhead_frac`` < 0.05 (ISSUE 9 —
+  instrumentation must be cheap enough to leave on in production).
 
 Both drivers of every timed comparison run a warm pass first (compile)
 and are then timed for ``rounds`` alternating passes with min-of-rounds
@@ -241,6 +245,62 @@ def _prefill_row(cfg, params, slots, prompt_len, n_req, max_len,
     }
 
 
+def _obs_row(cfg, params, slots, prompt_len, gen_len, max_len, rounds=3):
+    """Observability overhead at S=16 (ISSUE 9 gate): the identical
+    engine drain with the full obs stack on — metrics registry, span
+    tracer streaming JSONL to disk, chrome export excluded (it runs
+    after serving) — vs off. Interleaved min-of-rounds; the CI contract
+    is overhead_frac < 5%."""
+    import tempfile
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+
+    prompts, gens = _requests(cfg, slots, prompt_len, gen_len)
+    n_new = sum(gens)
+    eng = Engine(cfg, params, slots=slots, max_len=max_len)
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    passes = {"n": 0}
+
+    def one_pass(obs: bool):
+        passes["n"] += 1
+        kw = {}
+        if obs:
+            kw["metrics"] = obs_metrics.Registry()
+            kw["tracer"] = obs_tracing.Tracer(
+                os.path.join(tmp, f"t{passes['n']}.jsonl"))
+        sched = Scheduler(eng, **kw)
+        for i, (pr, g) in enumerate(zip(prompts, gens)):
+            sched.submit(Request(uid=f"r{i}", prompt=pr, max_new=g))
+        sched.run()
+        if obs:
+            kw["tracer"].close()
+
+    one_pass(False)                              # warm (compile) both paths
+    one_pass(True)
+    t_base = t_obs = float("inf")
+    for _ in range(rounds):                      # interleaved min-of-rounds
+        t0 = time.perf_counter()
+        one_pass(False)
+        t_base = min(t_base, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        one_pass(True)
+        t_obs = min(t_obs, time.perf_counter() - t0)
+
+    overhead = t_obs / t_base - 1.0
+    report(f"engine/S{slots}/obs_off_tok_s", n_new / t_base, "tok/s",
+           "metrics+trace disabled (NullRegistry, no tracer)")
+    report(f"engine/S{slots}/obs_on_tok_s", n_new / t_obs, "tok/s",
+           "registry + span tracer streaming JSONL")
+    report(f"engine/S{slots}/obs_overhead", overhead * 100, "%",
+           "must be < 5% (ISSUE 9)")
+    return {
+        "slots": slots, "tokens": n_new,
+        "base_s": t_base, "obs_s": t_obs,
+        "overhead_frac": overhead,
+    }
+
+
 def run(smoke: bool = False):
     # match the stream block to the prompt bucket so prefill rides whole
     # C-blocks (one rfft per prompt) on both sides of the comparison
@@ -266,6 +326,9 @@ def run(smoke: bool = False):
         prefill_row = _prefill_row(
             cfg, params, slots=16, prompt_len=prompt_len,
             n_req=16, max_len=max_len, rounds=2 if smoke else 3)
+        obs_row = _obs_row(cfg, params, slots=16, prompt_len=prompt_len,
+                           gen_len=gen_len, max_len=max_len,
+                           rounds=2 if smoke else 3)
     payload = {
         "bench": "engine",
         "platform": backend.platform(),
@@ -273,6 +336,7 @@ def run(smoke: bool = False):
         "results": rows,
         "latency": lat_rows,
         "prefill": prefill_row,
+        "obs": obs_row,
     }
     try:
         _JSON_PATH.write_text(json.dumps(payload, indent=1) + "\n")

@@ -40,16 +40,19 @@ def _fleet(prompts, gens, uid_prefix="req", **req_kw):
             for i, (pr, g) in enumerate(zip(prompts, gens))]
 
 
-def run_chaos(args, cfg, params, prompts, gens):
-    """ISSUE 6 chaos parity gate — see module docstring."""
+def run_chaos(args, cfg, params, prompts, gens, reg=None, tracer=None):
+    """ISSUE 6 chaos parity gate — see module docstring. Returns the
+    *final* outcome per uid (the last run that served it) so the obs
+    trace's terminal span statuses can be cross-checked."""
     from repro.serving_engine import (Engine, FaultInjector, FaultSpec,
                                       Scheduler)
+    obs_kw = dict(metrics=reg, tracer=tracer)
 
     def fresh_engine():
         return Engine(cfg, params, slots=args.slots, max_len=args.max_len)
 
     # ---- fault-free baseline: the token streams every later run must hit
-    sched = Scheduler(fresh_engine())
+    sched = Scheduler(fresh_engine(), **obs_kw)
     for r in _fleet(prompts, gens, "c"):
         sched.submit(r)
     baseline, _ = sched.run()
@@ -68,7 +71,7 @@ def run_chaos(args, cfg, params, prompts, gens):
     eng = fresh_engine()
     streamed = {}
     sched = Scheduler(eng, injector=injector, max_retries=2,
-                      backoff_base=0.0, log=print)
+                      backoff_base=0.0, log=print, **obs_kw)
     for r in _fleet(prompts, gens, "c",
                     on_token=lambda u, t: streamed.setdefault(u, [])
                     .append(t)):
@@ -124,7 +127,9 @@ def run_chaos(args, cfg, params, prompts, gens):
             if emitted["n"] == 11:       # mid-generation, slots in flight
                 os.kill(os.getpid(), signal.SIGTERM)
 
-        sched = Scheduler(fresh_engine(), snapshot_dir=snap_dir, log=print)
+        wave2_outcomes = dict(sched.outcomes)
+        sched = Scheduler(fresh_engine(), snapshot_dir=snap_dir, log=print,
+                          **obs_kw)
         for r in _fleet(prompts, gens, "c", on_token=kill_after):
             sched.submit(r)
         sched.run()
@@ -132,7 +137,7 @@ def run_chaos(args, cfg, params, prompts, gens):
         partial = sum(len(v) for v in sched.results.values())
         assert partial < sum(map(len, baseline.values()))
 
-        sched2 = Scheduler(fresh_engine(), snapshot_dir=snap_dir)
+        sched2 = Scheduler(fresh_engine(), snapshot_dir=snap_dir, **obs_kw)
         assert sched2.try_restore(), "no committed snapshot to resume"
         resumed, _ = sched2.run()
         for u in baseline:
@@ -143,7 +148,12 @@ def run_chaos(args, cfg, params, prompts, gens):
         print(f"[chaos] kill+resume: preempted after {partial} tokens "
               f"(step {sched.steps}), resumed to step {sched2.steps}, "
               "all requests token-exact vs uninterrupted baseline")
+        # final outcome per uid: w* ended in wave 2, c* in the resumed run
+        final = {u: o for u, o in wave2_outcomes.items()
+                 if u.startswith("w")}
+        final.update(sched2.outcomes)
     print("[chaos] chaos parity gate OK")
+    return final
 
 
 def main():
@@ -157,6 +167,13 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="run the fault-injection + kill/resume parity "
                          "gate instead of the plain demo (ISSUE 6)")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="dump the obs metrics registry on exit (.json = "
+                         "JSON, else Prometheus text exposition)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="stream span events to PATH (JSONL) and write "
+                         "PATH + '.chrome.json' (Perfetto-loadable); the "
+                         "span trees are validated before exit")
     args = ap.parse_args()
 
     from repro.kernels import backend
@@ -171,6 +188,17 @@ def main():
     cfg = reduce_for_smoke(get_config(args.arch))
     params, _ = unbox(init_model(jax.random.PRNGKey(0), cfg))
 
+    reg = tracer = None
+    if args.metrics_file:
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.Registry()
+        # process default too: engine trace_counts + kernel dispatch
+        # counters land in the same dump
+        obs_metrics.set_default_registry(reg)
+    if args.trace_file:
+        from repro.obs import tracing as obs_tracing
+        tracer = obs_tracing.Tracer(args.trace_file)
+
     rng = np.random.default_rng(0)
     plens = [int(rng.integers(3, 17)) for _ in range(args.requests)]
     gens = [int(rng.integers(8, 33)) for _ in range(args.requests)]
@@ -178,11 +206,12 @@ def main():
                for p in plens]
 
     if args.chaos:
-        run_chaos(args, cfg, params, prompts, gens)
+        final = run_chaos(args, cfg, params, prompts, gens, reg, tracer)
+        _dump_obs(args, reg, tracer, final)
         return
 
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
-    sched = Scheduler(eng)
+    sched = Scheduler(eng, metrics=reg, tracer=tracer)
     streamed = {}
     for i, (pr, g) in enumerate(zip(prompts, gens)):
         sched.submit(Request(
@@ -230,6 +259,35 @@ def main():
                     f"req{i}: engine {got[:8]} != solo {want[:8]}")
         print(f"[engine] per-request token-exact parity vs solo decode OK "
               f"({args.requests} requests)")
+    _dump_obs(args, reg, tracer, sched.outcomes)
+
+
+def _dump_obs(args, reg, tracer, outcomes=None):
+    """Write the --metrics-file/--trace-file artifacts: Prometheus (or
+    JSON) metrics dump, raw JSONL spans, a Perfetto-loadable Chrome
+    trace — and hard-validate that every request left a complete span
+    tree whose terminal status matches its Outcome (the ISSUE 9 chaos
+    acceptance check)."""
+    if tracer is not None:
+        from repro.obs import tracing as obs_tracing
+        tracer.close()
+        chrome = args.trace_file + ".chrome.json"
+        obs_tracing.write_chrome(tracer.events, chrome)
+        spans = obs_tracing.validate_spans(tracer.events)
+        if outcomes:
+            for uid, o in outcomes.items():
+                got = spans[uid][-1]["status"]
+                assert got == o.status, (
+                    f"{uid}: trace terminus {got!r} != outcome "
+                    f"{o.status!r}")
+        print(f"[obs] trace: {args.trace_file} (JSONL), {chrome} "
+              f"(Perfetto); {len(spans)} request span trees validated")
+    if reg is not None:
+        if args.metrics_file.endswith(".json"):
+            reg.dump_json(args.metrics_file)
+        else:
+            reg.dump_prometheus(args.metrics_file)
+        print(f"[obs] metrics: {args.metrics_file}")
 
 
 if __name__ == "__main__":

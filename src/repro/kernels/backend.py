@@ -170,6 +170,13 @@ def describe() -> str:
             f"fd_stream={fd_stream_enabled()}(C={fd_stream_block()})")
 
 
+def log_describe() -> None:
+    """Emit the :func:`describe` banner through the obs logger (one INFO
+    line; quiet under pytest / ``REPRO_LOG_LEVEL=WARNING``)."""
+    from repro.obs import log as obs_log
+    obs_log.banner(describe(), "backend")
+
+
 # ------------------------------------------------- FD streaming decode
 def fd_stream_enabled() -> bool:
     """Serving policy: replace the O(n·d)-per-token hist-replay decode of
@@ -455,10 +462,13 @@ def get_blocks(kernel: str, n: int, d: int, dtype, interpret: bool,
     key = _key(kernel, n, d, dtype, interpret, extra)
     with _cache_lock:
         hit = _load_cache().get(key)
+    source = "cache"
     if hit is None and os.environ.get(_ENV_CACHE) is None:
         # no explicit cache file: seed from the shipped pretuned tables
         hit = _load_pretuned().get(key)
+        source = "pretuned"
     if hit:
+        _count_dispatch(kernel, source)
         return int(hit["bn"]), int(hit["bd"])
     if tune_call is not None and autotune_enabled():
         best, best_t = None, float("inf")
@@ -474,5 +484,21 @@ def get_blocks(kernel: str, n: int, d: int, dtype, interpret: bool,
                 _load_cache()[key] = {"bn": best[0], "bd": best[1],
                                       "seconds": best_t}
                 _save_cache()
+            _count_dispatch(kernel, "autotune")
             return best
+    _count_dispatch(kernel, "heuristic")
     return heuristic_blocks(kernel, n, d, interpret)
+
+
+def _count_dispatch(kernel: str, source: str) -> None:
+    """Per-op block-resolution counter (ISSUE 9): how each kernel's
+    (bn, bd) was decided — cache hit, shipped pretuned table, fresh
+    autotune sweep, or the heuristic fallback. Routed through the lazy
+    process default registry (a no-op unless ``REPRO_METRICS`` is set or
+    an explicit registry was installed), so the resolve path — already
+    trace-time only — costs one no-op call when observability is off."""
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.default_registry().counter(
+        "repro_kernel_dispatch_total",
+        "kernel block resolutions by source",
+        ("kernel", "source")).labels(kernel=kernel, source=source).inc()

@@ -125,12 +125,26 @@ def main(argv=None):
     ap.add_argument("--queue-cap", type=int, default=None,
                     help="engine mode: bounded request queue "
                          "(admission rejects with QueueFull when full)")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="dump the obs metrics registry on exit "
+                         "(.json = JSON dump, anything else = Prometheus "
+                         "text exposition); also installs the registry as "
+                         "the process default so kernel dispatch counters "
+                         "land in it")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="engine mode: stream request span events to PATH "
+                         "as JSONL and write a Chrome trace_event export "
+                         "(PATH + '.chrome.json', Perfetto-loadable) on "
+                         "exit")
     args = ap.parse_args(argv)
     if not args.engine and (args.chaos is not None
                             or args.deadline is not None
                             or args.queue_cap is not None):
         ap.error("--chaos/--deadline/--queue-cap require --engine "
                  "(the supervised scheduler owns those knobs)")
+    if args.trace_file is not None and not args.engine:
+        ap.error("--trace-file requires --engine (request spans are "
+                 "emitted by the supervised scheduler)")
     if args.temperature < 0:
         ap.error(f"--temperature {args.temperature} must be >= 0")
     if args.top_k < 0:
@@ -143,6 +157,17 @@ def main(argv=None):
     if args.top_k > 0 and not args.engine:
         ap.error("--top-k requires --engine (the solo path samples the "
                  "full distribution)")
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+    reg = None
+    if args.metrics_file is not None:
+        reg = obs_metrics.Registry()
+        # process default too: backend dispatch counters and any engine
+        # built without an explicit registry report into the same dump
+        obs_metrics.set_default_registry(reg)
+    tracer = (obs_tracing.Tracer(args.trace_file)
+              if args.trace_file is not None else None)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -172,6 +197,7 @@ def main(argv=None):
             sched = Scheduler(eng, injector=injector,
                               default_deadline=args.deadline,
                               queue_cap=args.queue_cap,
+                              metrics=reg, tracer=tracer,
                               log=print if args.chaos is not None else None)
             for i in range(args.batch):
                 sched.submit(Request(uid=f"req{i}",
@@ -200,6 +226,13 @@ def main(argv=None):
             if args.chaos is not None and injector is not None:
                 print(f"[serve] chaos(seed={args.chaos}): "
                       f"{injector.fired} faults fired; log={injector.log}")
+            if tracer is not None:
+                tracer.close()
+                chrome = args.trace_file + ".chrome.json"
+                obs_tracing.write_chrome(tracer.events, chrome)
+                print(f"[serve] trace: {args.trace_file} (JSONL), "
+                      f"{chrome} (Perfetto)")
+            _dump_metrics(reg, args.metrics_file)
             return 0
         t0 = time.time()
         toks = generate(sb, params, prompt, args.gen_len,
@@ -209,7 +242,18 @@ def main(argv=None):
     n_new = args.batch * args.gen_len
     print(f"[serve] generated {n_new} tokens in {dt:.2f}s "
           f"({n_new / dt:.1f} tok/s); sample row: {np.asarray(toks[0])[:16]}")
+    _dump_metrics(reg, args.metrics_file)
     return 0
+
+
+def _dump_metrics(reg, path):
+    if reg is None or path is None:
+        return
+    if path.endswith(".json"):
+        reg.dump_json(path)
+    else:
+        reg.dump_prometheus(path)
+    print(f"[serve] metrics: {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Serving & training observability layer — see docs/observability.md.
+
+Four pieces (ISSUE 9):
+
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  under a thread-safe registry, with Prometheus text exposition and a
+  JSON dump. Off-by-default: the process default registry is a no-op
+  unless ``REPRO_METRICS`` is truthy or an explicit registry is passed.
+* :mod:`repro.obs.tracing` — per-request lifecycle span events (submit →
+  queue → admit → prefill → first-token → decode → terminal status),
+  JSONL on disk via ``REPRO_TRACE_FILE``, exportable to Chrome
+  ``trace_event`` JSON for chrome://tracing / Perfetto.
+* :mod:`repro.obs.log` — the one logger every banner routes through
+  (``REPRO_LOG_LEVEL``; quiet by default under pytest).
+* :mod:`repro.obs.profiling` — opt-in ``jax.profiler`` sessions +
+  annotations around prefill/decode/train steps (``REPRO_PROFILE_DIR``).
+"""
+from repro.obs.metrics import (NULL_REGISTRY, MirroredCounts, NullRegistry,
+                               Registry, default_registry, metrics_enabled,
+                               set_default_registry)
+from repro.obs.tracing import (Tracer, chrome_trace, default_tracer,
+                               load_jsonl, set_default_tracer,
+                               validate_spans, write_chrome)
+from repro.obs.log import banner, get_logger, set_level
+from repro.obs.profiling import annotation, profile_dir, session
+
+__all__ = [
+    "Registry", "NullRegistry", "NULL_REGISTRY", "MirroredCounts",
+    "default_registry", "set_default_registry", "metrics_enabled",
+    "Tracer", "default_tracer", "set_default_tracer", "load_jsonl",
+    "chrome_trace", "write_chrome", "validate_spans",
+    "get_logger", "set_level", "banner",
+    "profile_dir", "session", "annotation",
+]

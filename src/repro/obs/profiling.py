@@ -1,0 +1,71 @@
+"""Opt-in ``jax.profiler`` hooks around serving/training step regions.
+
+ISSUE 9 tentpole §4: set ``REPRO_PROFILE_DIR=/path`` and the scheduler
+(and trainer) bracket their run loops in a ``jax.profiler`` trace
+session writing TensorBoard-loadable protos there, with named
+``TraceAnnotation`` regions around prefill / decode / train steps so
+the device timeline is attributable to serving phases. With the env
+unset every hook is a no-op ``nullcontext`` — zero overhead, nothing
+imported beyond this module.
+
+The profiler can genuinely fail to start (no profiler plugin in a
+stripped CPU wheel, a second concurrent session, a read-only dir);
+``session`` degrades to a logged warning instead of taking down the
+serving loop — observability must never become the outage."""
+from __future__ import annotations
+
+import contextlib
+import os
+
+from repro.obs import log as obs_log
+
+_ENV_DIR = "REPRO_PROFILE_DIR"
+
+
+def profile_dir() -> str | None:
+    v = os.environ.get(_ENV_DIR)
+    return v or None
+
+
+@contextlib.contextmanager
+def session(name: str = "run"):
+    """Bracket a region in a ``jax.profiler`` trace when
+    ``REPRO_PROFILE_DIR`` is set; no-op otherwise. Never raises."""
+    d = profile_dir()
+    if d is None:
+        yield False
+        return
+    import jax
+    started = False
+    try:
+        jax.profiler.start_trace(d)
+        started = True
+        obs_log.get_logger("obs").info(
+            f"profiler session '{name}' -> {d}")
+    except Exception as e:  # noqa: BLE001 — never fail the serving loop
+        obs_log.get_logger("obs").warning(
+            f"profiler session '{name}' failed to start: {e!r}")
+    try:
+        yield started
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:  # noqa: BLE001
+                obs_log.get_logger("obs").warning(
+                    f"profiler stop failed: {e!r}")
+
+
+def annotation(name: str):
+    """Named sub-region (shows as a band on the profiler timeline).
+    Cheap nullcontext when no profile dir is configured."""
+    if profile_dir() is None:
+        return contextlib.nullcontext()
+    import jax
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # noqa: BLE001
+        return contextlib.nullcontext()
+
+
+__all__ = ["profile_dir", "session", "annotation"]

@@ -41,6 +41,9 @@ import numpy as np
 
 from repro.checkpoint import manifest as ckpt
 from repro.data.pipeline import DataConfig, batch_at
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import profiling as obs_prof
 
 
 @dataclasses.dataclass
@@ -87,17 +90,39 @@ class Trainer:
                  data_cfg: DataConfig, *,
                  put_batch: Optional[Callable] = None,
                  failure_hook: Optional[Callable[[int, int], None]] = None,
-                 log: Callable[[str], None] = print):
+                 log: Optional[Callable[[str], None]] = None,
+                 metrics=None):
         """``train_step(state, batch) -> (state, metrics)`` must be jit'd
         with donated state. ``put_batch(host_batch) -> device batch``
         places host numpy onto the mesh (identity by default).
-        ``failure_hook(step, attempt)`` may raise to inject failures."""
+        ``failure_hook(step, attempt)`` may raise to inject failures.
+        ``metrics`` is an obs registry (default: the process registry —
+        a no-op unless ``REPRO_METRICS``); ``log`` defaults to the obs
+        logger (``REPRO_LOG_LEVEL``; quiet under pytest)."""
         self.cfg = cfg
         self.train_step = train_step
         self.data_cfg = data_cfg
         self.put_batch = put_batch or (lambda b: b)
         self.failure_hook = failure_hook
-        self.log = log
+        self.log = log or obs_log.get_logger("trainer").info
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.default_registry())
+        m = self.metrics
+        self._m_steps = m.counter(
+            "repro_train_steps_total", "training steps completed")
+        self._m_retries = m.counter(
+            "repro_train_retries_total", "training step retries")
+        self._m_stragglers = m.counter(
+            "repro_train_stragglers_total", "steps flagged as stragglers")
+        self._m_ckpts = m.counter(
+            "repro_train_checkpoints_total",
+            "checkpoint saves issued", ("mode",))
+        self._m_step_s = m.histogram(
+            "repro_train_step_seconds", "train_step wall time")
+        self._m_loss = m.gauge(
+            "repro_train_loss", "last finite training loss")
+        self._m_tok_s = m.gauge(
+            "repro_train_tokens_per_s", "training throughput, last step")
         self.monitor = StragglerMonitor(cfg.straggler_factor, cfg.ema_alpha)
         self.ckpt = (ckpt.AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_ckpts)
                      if cfg.ckpt_dir else None)
@@ -145,23 +170,29 @@ class Trainer:
         from repro.kernels import backend
         self.log(f"[trainer] kernel dispatch: {backend.describe()}")
         self._install_signals()
+        prof = obs_prof.session("train")   # no-op unless REPRO_PROFILE_DIR
+        prof.__enter__()
         try:
             step = start_step
             while step < self.cfg.total_steps and not self._preempted:
                 batch = self.put_batch(batch_at(self.data_cfg, step))
                 state, metrics = self._step_with_retry(step, state, batch)
                 self.metrics_history.append(metrics)
+                self._m_steps.inc()
                 if self.cfg.log_every and step % self.cfg.log_every == 0:
                     ms = {k: float(v) for k, v in metrics.items()}
                     self.log(f"[trainer] step {step}: {ms}")
                 step += 1
                 if self.ckpt and step % self.cfg.ckpt_every == 0:
                     self._save(step, state)
+                    self._m_ckpts.labels(mode="async").inc()
             if self.ckpt:
                 self._save(step, state, sync=True)   # final / preemption save
+                self._m_ckpts.labels(mode="sync").inc()
             return state, step
         finally:
             self._restore_signals()
+            prof.__exit__(None, None, None)
 
     def _step_with_retry(self, step: int, state: Any, batch: Any):
         last_err: Optional[BaseException] = None
@@ -178,17 +209,27 @@ class Trainer:
                 if self.failure_hook is not None:
                     self.failure_hook(step, attempt)
                 t0 = time.perf_counter()
-                new_state, metrics = self.train_step(state, batch)
+                with obs_prof.annotation("train_step"):
+                    new_state, metrics = self.train_step(state, batch)
                 loss = metrics.get("loss")
                 if loss is not None and not np.isfinite(float(loss)):
                     raise FloatingPointError(f"non-finite loss at step {step}")
                 dt = time.perf_counter() - t0
+                self._m_step_s.observe(dt)
+                if loss is not None:
+                    self._m_loss.set(float(loss))
+                if isinstance(batch, dict) and "tokens" in batch and dt > 0:
+                    self._m_tok_s.set(
+                        float(np.asarray(batch["tokens"]).size) / dt)
                 if self.monitor.observe(step, dt):
+                    self._m_stragglers.inc()
                     self.log(f"[trainer] straggler: step {step} took {dt:.3f}s "
                              f"(ema {self.monitor.ema:.3f}s)")
                 return new_state, metrics
             except (FloatingPointError, RuntimeError, ValueError) as e:
                 last_err = e
+                if attempt < self.cfg.max_retries:
+                    self._m_retries.inc()
                 self.log(f"[trainer] step {step} attempt {attempt} failed: {e}")
         raise RuntimeError(
             f"step {step} failed after {self.cfg.max_retries + 1} attempts"

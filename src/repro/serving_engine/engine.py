@@ -100,7 +100,8 @@ class Engine:
                  guard_nonfinite: bool = True,
                  temperature: float = 0.0, top_k: int = 0,
                  bucket0: int | None = None,
-                 use_buckets: bool | None = None):
+                 use_buckets: bool | None = None,
+                 metrics=None):
         if cfg.kind != "decoder":
             raise NotImplementedError(
                 f"serving engine supports decoder archs, got {cfg.kind}")
@@ -136,8 +137,25 @@ class Engine:
             bucket0 = int(os.environ.get(_ENV_BUCKET0) or 16)
         self.buckets = self._bucket_ladder(int(bucket0))
         self._templates = {1: self._prefix_template}  # batch → packed tmpl
-        self.trace_counts = {"generate": 0, "insert": 0, "insert_from": 0,
-                             "decode1": 0, "chunk1": 0, "prefill_bucket": 0}
+        # ``trace_counts`` is the test-pinned retrace observable; under an
+        # obs registry (explicit, or the REPRO_METRICS process default)
+        # the same dict mirrors its increments into
+        # ``repro_engine_traces_total{fn=...}`` — one source of truth,
+        # two read paths (ISSUE 9 satellite a)
+        from repro.obs import metrics as obs_metrics
+        reg = metrics if metrics is not None else obs_metrics.default_registry()
+        self.metrics = reg
+        initial = {"generate": 0, "insert": 0, "insert_from": 0,
+                   "decode1": 0, "chunk1": 0, "prefill_bucket": 0}
+        if isinstance(reg, obs_metrics.NullRegistry):
+            self.trace_counts = dict(initial)
+        else:
+            self.trace_counts = obs_metrics.MirroredCounts(
+                initial,
+                reg.counter("repro_engine_traces_total",
+                            "jitted engine fn retraces (trace_counts)",
+                            ("fn",)),
+                "fn")
         self._generate = jax.jit(self._make("generate", self._generate_fn))
         self._insert = jax.jit(self._make("insert", self._insert_fn))
         self._insert_from = jax.jit(

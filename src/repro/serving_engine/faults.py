@@ -22,7 +22,12 @@ Two modes, freely combined:
   seeded chaos run is exactly reproducible.
 
 Every decision is appended to ``self.log`` as ``(site, visit, action,
-detail)`` for post-mortem assertions in tests.
+detail)`` for post-mortem assertions in tests. When the scheduler calls
+:meth:`~FaultInjector.bind` with its obs registry/tracer (ISSUE 9), every
+firing also increments ``repro_faults_injected_total{site,action,spec}``
+and lands in the request trace as a ``fault`` instant tagged with the
+site, action, and originating spec — chaos runs are attributable
+per-request in the Perfetto timeline.
 """
 from __future__ import annotations
 
@@ -77,11 +82,32 @@ class FaultInjector:
         self._visits: Dict[str, int] = {s: 0 for s in SITES}
         self.fired = 0
         self.log: List[Tuple[str, int, str, str]] = []
+        self._tracer = None
+        self._m_fired = None
         # the scheduler's detokenise worker hits the callback site from
         # its own thread while the loop thread hits prefill/decode —
         # serialise counter/rng mutation so schedules stay deterministic
         # per site (visit order within a site is still FIFO)
         self._mutex = threading.Lock()
+
+    # ------------------------------------------------------- observability
+    def bind(self, metrics=None, tracer=None) -> None:
+        """Attach an obs registry / span tracer (the Scheduler calls this
+        at construction). Idempotent; either argument may be None."""
+        self._tracer = tracer
+        if metrics is not None:
+            self._m_fired = metrics.counter(
+                "repro_faults_injected_total",
+                "chaos injector firings", ("site", "action", "spec"))
+
+    def _record(self, site: str, uid: Optional[str], action, spec: str):
+        if self._m_fired is not None:
+            self._m_fired.labels(site=site, action=action[0],
+                                 spec=spec).inc()
+        if self._tracer is not None:
+            self._tracer.instant("fault", uid, site=site,
+                                 action=action[0], spec=spec,
+                                 detail=str(action[1]))
 
     # ------------------------------------------------------------ matching
     def _decide(self, site: str, uid: Optional[str] = None):
@@ -93,12 +119,14 @@ class FaultInjector:
         visit = self._visits[site]
         self._visits[site] += 1
         action = None
+        spec_label = ""
         for i, sp in enumerate(self.specs):
             if sp.site != site or (sp.uid is not None and sp.uid != uid):
                 continue
             hit = self._hits[i]
             self._hits[i] += 1
             if action is None and sp.at <= hit < sp.at + sp.count:
+                spec_label = f"spec{i}"
                 if sp.poison_slot is not None:
                     action = ("poison", sp.poison_slot)
                 else:
@@ -111,10 +139,12 @@ class FaultInjector:
             # depends on (seed, visit order), never on the scripted plan
             drawn = self._rng.random() < rate
             if action is None and drawn:
+                spec_label = "seeded"
                 action = ("raise", f"seeded {site} fault (visit {visit})")
         if action is not None:
             self.fired += 1
             self.log.append((site, visit, action[0], str(action[1])))
+            self._record(site, uid, action, spec_label)
         return action
 
     # --------------------------------------------------------------- sites

@@ -76,6 +76,10 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import profiling as obs_prof
+from repro.obs import tracing as obs_tracing
 from repro.serving_engine.engine import Engine
 
 #: terminal request states; anything else is pending/in-flight
@@ -212,6 +216,9 @@ class _DetokWorker:
                 except Exception as e:  # noqa: BLE001 — isolation boundary
                     req.on_token = None
                     sched.outcomes[req.uid].callback_error = _errmsg(e)
+                    sched._m_cb_errors.inc()
+                    sched._ti("callback_detached", req.uid,
+                              error=_errmsg(e))
                     sched.log(f"[scheduler] request {req.uid}: on_token "
                               f"raised, callback detached ({_errmsg(e)})")
             finally:
@@ -233,7 +240,9 @@ class Scheduler:
                  detok_cap: int = 1024,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
-                 log: Optional[Callable[[str], None]] = None):
+                 log: Optional[Callable[[str], None]] = None,
+                 metrics=None,
+                 tracer: Optional[obs_tracing.Tracer] = None):
         if admission not in ("reject", "block"):
             raise ValueError(f"admission={admission!r}: "
                              "expected 'reject' or 'block'")
@@ -262,7 +271,70 @@ class Scheduler:
         self._detok: Optional[_DetokWorker] = None
         self.clock = clock
         self.sleep = sleep
-        self.log = log or (lambda msg: None)
+        # supervision messages route through the one obs logger by
+        # default (REPRO_LOG_LEVEL; quiet under pytest) — an explicit
+        # ``log=`` callable still wins, e.g. tests capturing lines
+        self.log = log or obs_log.get_logger("scheduler").info
+        # ---- observability (ISSUE 9): metrics registry + span tracer.
+        # Explicit objects win; else the process defaults (a no-op
+        # registry unless REPRO_METRICS, a tracer only under
+        # REPRO_TRACE_FILE) — the un-instrumented hot path pays one
+        # no-op call per site, no device syncs ever.
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.default_registry())
+        self.tracer = (tracer if tracer is not None
+                       else obs_tracing.default_tracer())
+        # one cached flag gates the per-token path (TTFT/TPOT + instants)
+        self._obs_on = (self.tracer is not None or
+                        not isinstance(self.metrics,
+                                       obs_metrics.NullRegistry))
+        m = self.metrics
+        self._m_submitted = m.counter(
+            "repro_requests_submitted_total", "requests accepted by submit()")
+        self._m_rejected = m.counter(
+            "repro_requests_rejected_total",
+            "submissions refused before queuing", ("reason",))
+        self._m_finished = m.counter(
+            "repro_requests_finished_total",
+            "terminal request outcomes", ("status",))
+        self._m_retries = m.counter(
+            "repro_retries_total", "transient-fault retries", ("site",))
+        self._m_evictions = m.counter(
+            "repro_evictions_total", "slot/queue evictions", ("reason",))
+        self._m_steps = m.counter(
+            "repro_decode_steps_total", "batched decode steps taken")
+        self._m_prefills = m.counter(
+            "repro_prefills_total", "per-request prefills", ("mode",))
+        self._m_packed_waves = m.counter(
+            "repro_packed_prefill_waves_total",
+            "packed admission batches run")
+        self._m_snapshots = m.counter(
+            "repro_snapshots_total", "snapshot writes", ("result",))
+        self._m_cb_errors = m.counter(
+            "repro_callback_errors_total", "on_token callbacks detached")
+        self._m_queue_depth = m.gauge(
+            "repro_queue_depth", "requests waiting for admission")
+        self._m_slots_active = m.gauge(
+            "repro_slots_active", "slots holding in-flight requests")
+        self._m_detok_depth = m.gauge(
+            "repro_detok_queue_depth",
+            "tokens waiting for the detokenise worker")
+        self._m_ttft = m.histogram(
+            "repro_ttft_seconds", "submit -> first token recorded")
+        self._m_tpot = m.histogram(
+            "repro_tpot_seconds", "inter-token gap per request")
+        self._m_step_s = m.histogram(
+            "repro_decode_step_seconds",
+            "one batched decode step, host wall incl. token sync")
+        self._m_prefill_s = m.histogram(
+            "repro_prefill_seconds", "admission wave wall time")
+        self._m_snap_s = m.histogram(
+            "repro_snapshot_seconds", "snapshot write wall time")
+        self._t_submit: Dict[str, float] = {}   # uid -> submit clock()
+        self._t_last: Dict[str, float] = {}     # uid -> last token clock()
+        self._span_open: Dict[str, List[str]] = {}  # uid -> open child spans
+        if injector is not None:
+            injector.bind(self.metrics, self.tracer)
         self.results: Dict[str, List[int]] = {}
         self.outcomes: Dict[str, Outcome] = {}
         self._deadlines: Dict[str, float] = {}   # uid -> absolute clock()
@@ -277,6 +349,73 @@ class Scheduler:
         self.preempted = False
         self._resume = None           # set by try_restore()
 
+    # ------------------------------------------------------- observability
+    def _tb(self, name, uid=None, **attrs):
+        if self.tracer is not None:
+            self.tracer.begin(name, uid, **attrs)
+
+    def _te(self, name, uid=None, **attrs):
+        if self.tracer is not None:
+            self.tracer.end(name, uid, **attrs)
+
+    def _ti(self, name, uid=None, **attrs):
+        if self.tracer is not None:
+            self.tracer.instant(name, uid, **attrs)
+
+    def _open_span(self, uid: str, name: str, **attrs):
+        self._span_open.setdefault(uid, []).append(name)
+        self._tb(name, uid, **attrs)
+
+    def _close_span(self, uid: str, name: str, **attrs):
+        opened = self._span_open.get(uid)
+        if opened and name in opened:
+            opened.remove(name)
+            self._te(name, uid, **attrs)
+
+    def _close_request(self, uid: str, status: str):
+        """End any still-open child spans (innermost first), then the
+        ``request`` span with its terminal status — the single point that
+        guarantees every submitted request leaves a complete span tree."""
+        for name in reversed(self._span_open.pop(uid, [])):
+            self._te(name, uid)
+        self._te("request", uid, status=status)
+
+    def _observe_counters(self, slots_active: Optional[int] = None):
+        """Refresh the global gauge/counter tracks (cheap host reads)."""
+        self._m_queue_depth.set(len(self.queue))
+        if self._detok is not None:
+            self._m_detok_depth.set(self._detok._q.qsize())
+        if slots_active is not None:
+            self._m_slots_active.set(slots_active)
+        if self.tracer is not None:
+            self.tracer.counter("queue_depth", len(self.queue))
+            if slots_active is not None:
+                self.tracer.counter("slots_active", slots_active)
+
+    def _ensure_request_spans(self, slot_req: Dict[int, Request]):
+        """(Re-)begin request spans for pending work entering ``run()``.
+        Fresh submissions opened theirs in :meth:`submit`; requests
+        carried across a preemption (same-process re-run or a
+        :meth:`try_restore` in a new process) are re-begun with
+        ``resumed=True`` — restored in-flight requests get an immediate
+        queue B+E pair so every request span satisfies the
+        :func:`~repro.obs.tracing.validate_spans` contract."""
+        if self.tracer is None:
+            return
+        with self._lock:
+            queued = list(self.queue)
+        for req in queued:
+            if req.uid not in self._span_open:
+                self._tb("request", req.uid, resumed=True)
+                self._open_span(req.uid, "queue", resumed=True)
+        for slot in sorted(slot_req):
+            uid = slot_req[slot].uid
+            if uid not in self._span_open:
+                self._tb("request", uid, resumed=True)
+                self._tb("queue", uid, resumed=True)
+                self._te("queue", uid)
+                self._open_span(uid, "decode", slot=slot, resumed=True)
+
     # ----------------------------------------------------------- admission
     def submit(self, req: Request, *, timeout: Optional[float] = None) -> None:
         """Queue a request. Rejects loudly when prompt + generation could
@@ -287,11 +426,13 @@ class Scheduler:
         drains a spot (or ``timeout`` seconds elapse — then QueueFull)."""
         p = int(np.asarray(req.prompt).shape[-1])
         if req.max_new < 1:
+            self._m_rejected.labels(reason="bad_request").inc()
             raise ValueError(f"request {req.uid}: max_new must be >= 1")
         cap = self.engine.capacity
         # positions written: p prompt + (max_new - 1) fed-back tokens
         # (the final sampled token is emitted but never fed)
         if cap is not None and p + req.max_new - 1 > cap:
+            self._m_rejected.labels(reason="over_capacity").inc()
             raise ValueError(
                 f"request {req.uid}: prompt {p} + max_new {req.max_new} "
                 f"exceeds slot capacity {cap} "
@@ -300,11 +441,13 @@ class Scheduler:
             # a reused uid — including one from an already-completed run —
             # would merge token lists and trip the budget check early,
             # silently truncating the later request
+            self._m_rejected.labels(reason="duplicate_uid").inc()
             raise ValueError(f"request uid {req.uid!r} already submitted")
         with self._not_full:
             if self.queue_cap is not None:
                 if self.admission == "reject":
                     if len(self.queue) >= self.queue_cap:
+                        self._m_rejected.labels(reason="queue_full").inc()
                         raise QueueFull(
                             f"request {req.uid}: queue at capacity "
                             f"{self.queue_cap} (admission='reject')")
@@ -315,6 +458,8 @@ class Scheduler:
                         remaining = (None if deadline is None
                                      else deadline - self.clock())
                         if remaining is not None and remaining <= 0:
+                            self._m_rejected.labels(
+                                reason="queue_full").inc()
                             raise QueueFull(
                                 f"request {req.uid}: queue still full "
                                 f"after {timeout}s (admission='block')")
@@ -327,6 +472,11 @@ class Scheduler:
                    else self.default_deadline)
             if ttl is not None:
                 self._deadlines[req.uid] = self.clock() + float(ttl)
+        self._m_submitted.inc()
+        self._t_submit[req.uid] = self.clock()
+        self._tb("request", req.uid, prompt_len=p, max_new=req.max_new)
+        self._open_span(req.uid, "queue")
+        self._observe_counters()
 
     def _pop_request(self) -> Optional[Request]:
         with self._not_full:
@@ -334,7 +484,9 @@ class Scheduler:
                 return None
             req = self.queue.popleft()
             self._not_full.notify()
-            return req
+        self._close_span(req.uid, "queue")
+        self._observe_counters()
+        return req
 
     def _pop_up_to(self, n: int) -> List[Request]:
         """Pop at most n queued requests (FIFO) for one admission wave."""
@@ -343,6 +495,10 @@ class Scheduler:
             while self.queue and len(out) < n:
                 out.append(self.queue.popleft())
                 self._not_full.notify()
+        for req in out:
+            self._close_span(req.uid, "queue")
+        if out:
+            self._observe_counters()
         return out
 
     # ------------------------------------------------------------ signals
@@ -374,6 +530,10 @@ class Scheduler:
         if error is not None:
             out.error = error
         self._deadlines.pop(uid, None)
+        self._m_finished.labels(status=status).inc()
+        self._close_request(uid, status)
+        self._t_submit.pop(uid, None)
+        self._t_last.pop(uid, None)
         if status != "ok":
             self.log(f"[scheduler] request {uid}: {status}"
                      + (f" ({error})" if error else ""))
@@ -386,6 +546,19 @@ class Scheduler:
         (or an injected callback fault) is detached and noted — never
         unwinds the loop."""
         self.results[req.uid].append(token)
+        if self._obs_on:
+            now = self.clock()
+            if len(self.results[req.uid]) == 1:
+                t0 = self._t_submit.get(req.uid)
+                if t0 is not None:
+                    self._m_ttft.observe(now - t0)
+                self._ti("first_token", req.uid)
+            else:
+                prev = self._t_last.get(req.uid)
+                if prev is not None:
+                    self._m_tpot.observe(now - prev)
+                self._ti("token", req.uid)
+            self._t_last[req.uid] = now
         if req.on_token is not None:
             if self._detok is not None:
                 self._detok.put(req, token)
@@ -397,6 +570,8 @@ class Scheduler:
                 except Exception as e:  # noqa: BLE001 — isolation boundary
                     req.on_token = None
                     self.outcomes[req.uid].callback_error = _errmsg(e)
+                    self._m_cb_errors.inc()
+                    self._ti("callback_detached", req.uid, error=_errmsg(e))
                     self.log(f"[scheduler] request {req.uid}: on_token "
                              f"raised, callback detached ({_errmsg(e)})")
         done = len(self.results[req.uid]) >= req.max_new
@@ -418,6 +593,8 @@ class Scheduler:
             for req in self.queue:
                 dl = self._deadlines.get(req.uid)
                 if dl is not None and now > dl:
+                    self._ti("expired", req.uid, where="queue")
+                    self._m_evictions.labels(reason="deadline").inc()
                     self._finish(req.uid, "expired",
                                  "deadline exceeded while queued")
                     self.evictions += 1
@@ -432,6 +609,8 @@ class Scheduler:
             req = slot_req[slot]
             dl = self._deadlines.get(req.uid)
             if dl is not None and now > dl:
+                self._ti("expired", req.uid, where="slot", slot=slot)
+                self._m_evictions.labels(reason="deadline").inc()
                 self._finish(
                     req.uid, "expired",
                     f"deadline exceeded after "
@@ -443,8 +622,11 @@ class Scheduler:
         return state
 
     # ------------------------------------------------------------ retries
-    def _backoff(self, attempt: int):
+    def _backoff(self, attempt: int, *, site: str = "other",
+                 uid: Optional[str] = None):
         self.retries += 1
+        self._m_retries.labels(site=site).inc()
+        self._ti("retry", uid, site=site, attempt=attempt)
         if self.backoff_base > 0:
             self.sleep(self.backoff_base * (2 ** attempt))
 
@@ -463,13 +645,16 @@ class Scheduler:
                     raise
                 self.log(f"[scheduler] prefill {req.uid} attempt {attempt} "
                          f"failed ({_errmsg(e)}); retrying")
-                self._backoff(attempt)
+                self._backoff(attempt, site="prefill", uid=req.uid)
 
     def _admit(self, req: Request, state, slot_req: Dict[int, Request],
                free: List[int]):
         """Prefill + insert one request; failures fail only this request
-        (error outcome, slot back on the free list)."""
+        (error outcome, slot back on the free list). A failing or
+        1-token request's open ``prefill`` span is closed by
+        ``_finish`` → ``_close_request``."""
         slot = free.pop()
+        self._open_span(req.uid, "prefill")
         try:
             prefix, first, plen = self._prefill_with_retry(req)
         except Exception as e:          # noqa: BLE001 — isolation boundary
@@ -477,6 +662,7 @@ class Scheduler:
             free.append(slot)
             return state
         self.prefills += 1
+        self._m_prefills.labels(mode="single").inc()
         tok = int(first)
         if self._emit(req, tok):        # 1-token request: done
             self._finish(req.uid, "ok")
@@ -489,6 +675,8 @@ class Scheduler:
             self._finish(req.uid, "error", f"insert failed: {_errmsg(e)}")
             free.append(slot)
             return state
+        self._close_span(req.uid, "prefill")
+        self._open_span(req.uid, "decode", slot=slot)
         slot_req[slot] = req
         return state
 
@@ -510,7 +698,7 @@ class Scheduler:
                     return False
                 self.log(f"[scheduler] prefill {req.uid} attempt {attempt} "
                          f"failed ({_errmsg(e)}); retrying")
-                self._backoff(attempt)
+                self._backoff(attempt, site="prefill", uid=req.uid)
         return False                     # unreachable
 
     def _admit_packed(self, reqs: List[Request], state,
@@ -523,6 +711,8 @@ class Scheduler:
         survivors = [r for r in reqs if self._gate_with_retry(r)]
         if not survivors:
             return state
+        for r in survivors:
+            self._open_span(r.uid, "prefill", packed=True)
         prompts = [r.prompt for r in survivors]
         seeds = [r.resolved_seed() for r in survivors]
         packed = None
@@ -540,16 +730,18 @@ class Scheduler:
                 self.log(f"[scheduler] packed prefill ({len(survivors)} "
                          f"reqs) attempt {attempt} failed ({_errmsg(e)}); "
                          "retrying")
-                self._backoff(attempt)
+                self._backoff(attempt, site="prefill")
             except Exception as e:      # noqa: BLE001 — isolation boundary
                 for r in survivors:
                     self._finish(r.uid, "error",
                                  f"prefill failed: {_errmsg(e)}")
                 return state
         self.packed_prefills += 1
+        self._m_packed_waves.inc()
         first_h = np.asarray(first)      # host sync: first-token stream
         for row, req in enumerate(survivors):
             self.prefills += 1
+            self._m_prefills.labels(mode="packed").inc()
             tok = int(first_h[row])
             if self._emit(req, tok):     # 1-token request: done
                 self._finish(req.uid, "ok")
@@ -564,6 +756,8 @@ class Scheduler:
                              f"insert failed: {_errmsg(e)}")
                 free.append(slot)
                 continue
+            self._close_span(req.uid, "prefill")
+            self._open_span(req.uid, "decode", slot=slot)
             slot_req[slot] = req
         return state
 
@@ -572,18 +766,21 @@ class Scheduler:
         """Route a wave of admissions: prompts on the bucket ladder go
         through the packed path together; off-ladder prompts (and a
         wave of one) use the sequential b=1 path."""
-        packable: List[Request] = []
-        rest: List[Request] = []
-        for r in reqs:
-            p = int(np.asarray(r.prompt).shape[-1])
-            (packable if self.engine.bucket_for(p) is not None
-             else rest).append(r)
-        if len(packable) >= 2:
-            state = self._admit_packed(packable, state, slot_req, free)
-        else:
-            rest = reqs
-        for req in rest:
-            state = self._admit(req, state, slot_req, free)
+        t0 = self.clock()
+        with obs_prof.annotation("prefill_wave"):
+            packable: List[Request] = []
+            rest: List[Request] = []
+            for r in reqs:
+                p = int(np.asarray(r.prompt).shape[-1])
+                (packable if self.engine.bucket_for(p) is not None
+                 else rest).append(r)
+            if len(packable) >= 2:
+                state = self._admit_packed(packable, state, slot_req, free)
+            else:
+                rest = reqs
+            for req in rest:
+                state = self._admit(req, state, slot_req, free)
+        self._m_prefill_s.observe(self.clock() - t0)
         return state
 
     def _generate_with_retry(self, state, slot_req: Dict[int, Request],
@@ -608,7 +805,7 @@ class Scheduler:
                     break
                 self.log(f"[scheduler] decode step {self.steps} attempt "
                          f"{attempt} failed ({_errmsg(e)}); retrying")
-                self._backoff(attempt)
+                self._backoff(attempt, site="decode")
         for slot in sorted(slot_req):
             req = slot_req[slot]
             self._finish(req.uid, "error",
@@ -632,15 +829,22 @@ class Scheduler:
         # settle in-flight callbacks first: a snapshot must capture
         # callback_error/detach outcomes that are already "emitted"
         self._drain_detok()
+        t0 = self.clock()
+        self._tb("snapshot", step=self.steps, final=final)
+        result = "ok"
         try:
             if self.injector is not None:
                 self.injector.snapshot(self.steps)
             snap.save_snapshot(self.snapshot_dir, self, state, slot_req,
-                               free)
+                               free, metrics=self.metrics)
         except Exception as e:          # noqa: BLE001 — isolation boundary
+            result = "error"
             self.snapshot_errors += 1
             self.log(f"[scheduler] snapshot"
                      f"{' (final)' if final else ''} failed: {_errmsg(e)}")
+        self._m_snapshots.labels(result=result).inc()
+        self._m_snap_s.observe(self.clock() - t0)
+        self._te("snapshot", result=result)
 
     def try_restore(self, *, callbacks: Optional[Dict] = None) -> bool:
         """Load the latest committed snapshot from ``snapshot_dir`` into
@@ -709,6 +913,9 @@ class Scheduler:
         if self.detok_async and self._detok is None:
             self._detok = _DetokWorker(self, self.detok_cap)
             self._detok.start()
+        self._ensure_request_spans(slot_req)
+        prof = obs_prof.session("serve")     # no-op unless REPRO_PROFILE_DIR
+        prof.__enter__()
         try:
             while True:
                 with self._lock:
@@ -736,15 +943,28 @@ class Scheduler:
                         continue
                 if not slot_req:
                     continue     # everything expired/errored; re-check queue
-                state, toks, ok = self._generate_with_retry(state, slot_req,
-                                                            free)
-                self.steps += 1
-                toks_h = np.asarray(toks)   # host sync: stream point
-                ok_h = np.asarray(ok)
+                t_step = self.clock()
+                self._tb("step", step=self.steps)
+                try:
+                    with obs_prof.annotation("decode_step"):
+                        state, toks, ok = self._generate_with_retry(
+                            state, slot_req, free)
+                    self.steps += 1
+                    self._m_steps.inc()
+                    toks_h = np.asarray(toks)   # host sync: stream point
+                    ok_h = np.asarray(ok)
+                finally:
+                    # close the step span on EngineStepError too — a
+                    # persistent decode failure must not dangle spans
+                    self._m_step_s.observe(self.clock() - t_step)
+                    self._te("step")
                 for slot in sorted(slot_req):
                     req = slot_req[slot]
                     if not ok_h[slot]:
                         # quarantined on device; recycle the slot
+                        self._ti("quarantine", req.uid, slot=slot,
+                                 step=self.steps - 1)
+                        self._m_evictions.labels(reason="nonfinite").inc()
                         self._finish(
                             req.uid, "error",
                             f"non-finite logits at step {self.steps - 1} "
@@ -760,11 +980,18 @@ class Scheduler:
                         state = eng.release(state, slot)
                         del slot_req[slot]
                         free.append(slot)
+                self._observe_counters(len(slot_req))
                 if (self.snapshot_every and not self.preempted
                         and self.steps % self.snapshot_every == 0):
                     self._snapshot(state, slot_req, free)
             if self.preempted:
                 self._snapshot(state, slot_req, free, final=True)
+                # close every open span with a preempted terminus so the
+                # trace of this run validates; a later run (or a restore
+                # in a new process) re-begins them with resumed=True
+                for uid in sorted(self._span_open):
+                    self._ti("preempt", uid)
+                    self._close_request(uid, "preempted")
         finally:
             if self._detok is not None:
                 # settle every in-flight callback before handing results
@@ -773,4 +1000,7 @@ class Scheduler:
                 self._detok.stop()
                 self._detok = None
             self._restore_signals()
+            prof.__exit__(None, None, None)
+            if self.tracer is not None:
+                self.tracer.flush()
         return self.results, state

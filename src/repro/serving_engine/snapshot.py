@@ -61,9 +61,11 @@ def meta_request(meta: Dict[str, Any], callbacks: Optional[Dict] = None):
 
 
 def save_snapshot(snapshot_dir: str, sched, state, slot_req: Dict,
-                  free) -> str:
+                  free, *, metrics=None) -> str:
     """Write one committed snapshot (manifest step = scheduler decode
-    steps taken). Returns the step directory path."""
+    steps taken). Returns the step directory path. ``metrics`` (an obs
+    registry) gets per-snapshot size gauges — payload bytes are the
+    first thing to watch when snapshot latency regresses."""
     now = sched.clock()
     extra = {
         "kind": SNAPSHOT_KIND,
@@ -85,7 +87,22 @@ def save_snapshot(snapshot_dir: str, sched, state, slot_req: Dict,
         "deadline_remaining": {uid: float(dl - now)
                                for uid, dl in sched._deadlines.items()},
     }
-    return manifest.save(snapshot_dir, sched.steps, state, extra=extra)
+    path = manifest.save(snapshot_dir, sched.steps, state, extra=extra)
+    if metrics is not None:
+        try:
+            nbytes = sum(
+                os.path.getsize(os.path.join(path, f))
+                for f in os.listdir(path))
+            metrics.gauge(
+                "repro_snapshot_bytes",
+                "size of the latest committed snapshot").set(nbytes)
+            metrics.gauge(
+                "repro_snapshot_inflight_requests",
+                "in-flight requests captured by the latest snapshot",
+            ).set(len(slot_req))
+        except OSError:
+            pass        # metrics must never fail a snapshot
+    return path
 
 
 def load_snapshot(snapshot_dir: str, engine, *,

@@ -1,0 +1,202 @@
+"""Render serving observability artifacts into a human report (CLI).
+
+Consumes the two ISSUE 9 artifact kinds:
+
+* a **metrics dump** — the Prometheus text exposition or JSON file
+  written by ``--metrics-file`` (launch/serve.py, examples, benchmarks)
+  or ``Registry.dump_*``;
+* a **trace file** — the JSONL span stream written by ``--trace-file``
+  or ``REPRO_TRACE_FILE``.
+
+and prints a latency/throughput summary (request counts by terminal
+status, TTFT/TPOT/step-time percentiles reconstructed from spans,
+fault/retry tallies). Also the artifact Swiss-army knife for CI:
+
+    python tools/obs_report.py --trace t.jsonl --metrics m.prom
+    python tools/obs_report.py --trace t.jsonl --check     # validate only
+    python tools/obs_report.py --trace t.jsonl --chrome out.json
+
+``--check`` exits non-zero unless every request span tree is complete
+(every begin ended, terminal status present, queue child present) —
+the machine contract from :func:`repro.obs.tracing.validate_spans`;
+the serve/chaos CI smoke jobs gate on it. ``--chrome`` converts the
+JSONL to Chrome ``trace_event`` JSON for chrome://tracing / Perfetto.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import tracing  # noqa: E402
+
+
+def _pct(xs, q):
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    i = min(len(xs) - 1, max(0, int(round(q / 100 * (len(xs) - 1)))))
+    return xs[i]
+
+
+def _fmt_s(x):
+    return "-" if x != x else (f"{x * 1e3:.2f}ms" if x < 1 else f"{x:.3f}s")
+
+
+def report_trace(events) -> dict:
+    """Span-derived serving report: terminal statuses, per-request
+    TTFT (request begin → first_token), inter-token gaps, decode-step
+    walls, fault/retry instants."""
+    spans = tracing.validate_spans(events)
+    statuses: dict = {}
+    ttft, tpot, steps, faults, retries = [], [], [], 0, 0
+    # per-uid instant timestamps for TTFT/TPOT reconstruction
+    first_tok: dict = {}
+    last_tok: dict = {}
+    for ev in events:
+        name, uid, ts = ev["name"], ev.get("uid"), ev["ts"]
+        if ev["ph"] == "i":
+            if name == "first_token" and uid is not None:
+                first_tok.setdefault(uid, ts)
+                last_tok[uid] = ts
+            elif name == "token" and uid is not None:
+                if uid in last_tok:
+                    tpot.append(ts - last_tok[uid])
+                last_tok[uid] = ts
+            elif name == "fault":
+                faults += 1
+            elif name == "retry":
+                retries += 1
+        elif ev["ph"] == "E" and name == "step":
+            pass
+    # step walls from B/E pairs on the global track
+    open_step = []
+    for ev in events:
+        if ev["name"] != "step":
+            continue
+        if ev["ph"] == "B":
+            open_step.append(ev["ts"])
+        elif ev["ph"] == "E" and open_step:
+            steps.append(ev["ts"] - open_step.pop())
+    n_spans = 0
+    for uid, recs in spans.items():
+        for rec in recs:
+            n_spans += 1
+            statuses[rec["status"]] = statuses.get(rec["status"], 0) + 1
+            if uid in first_tok and first_tok[uid] >= rec["t0"] and (
+                    rec["t1"] is None or first_tok[uid] <= rec["t1"]):
+                ttft.append(first_tok[uid] - rec["t0"])
+    return {
+        "requests": len(spans), "request_spans": n_spans,
+        "statuses": statuses,
+        "ttft": ttft, "tpot": tpot, "step": steps,
+        "faults": faults, "retries": retries,
+    }
+
+
+def load_metrics(path: str) -> dict:
+    """Parse a metrics dump — JSON (Registry.dump_json) or the
+    Prometheus text exposition — into {metric_name: [(labels, value)]}
+    (histograms keep their _bucket/_sum/_count sample names)."""
+    text = pathlib.Path(path).read_text()
+    out: dict = {}
+    if path.endswith(".json"):
+        data = json.loads(text).get("metrics", {})
+        for name, m in data.items():
+            for s in m.get("series", []):
+                labels = s.get("labels", {})
+                if "value" in s:
+                    out.setdefault(name, []).append((labels, s["value"]))
+                else:                      # histogram series
+                    out.setdefault(name + "_count", []).append(
+                        (labels, float(s.get("count", 0))))
+                    out.setdefault(name + "_sum", []).append(
+                        (labels, float(s.get("sum", 0.0))))
+        return out
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        head, _, val = line.rpartition(" ")
+        if "{" in head:
+            name, _, rest = head.partition("{")
+            labels = dict(p.split("=", 1) for p in
+                          rest.rstrip("}").split(",") if "=" in p)
+            labels = {k: v.strip('"') for k, v in labels.items()}
+        else:
+            name, labels = head, {}
+        out.setdefault(name, []).append((labels, float(val)))
+    return out
+
+
+def print_report(trace_path=None, metrics_path=None, out=print):
+    if trace_path:
+        events = tracing.load_jsonl(trace_path)
+        r = report_trace(events)
+        out(f"trace: {trace_path} ({len(events)} events)")
+        out(f"  requests: {r['requests']} uids, {r['request_spans']} "
+            f"span trees; statuses={r['statuses']}")
+        for key, label in (("ttft", "TTFT"), ("tpot", "TPOT"),
+                           ("step", "decode step")):
+            xs = r[key]
+            out(f"  {label}: n={len(xs)} p50={_fmt_s(_pct(xs, 50))} "
+                f"p90={_fmt_s(_pct(xs, 90))} p99={_fmt_s(_pct(xs, 99))}")
+        out(f"  faults injected: {r['faults']}; retries: {r['retries']}")
+    if metrics_path:
+        m = load_metrics(metrics_path)
+        out(f"metrics: {metrics_path} ({len(m)} series)")
+        for name in sorted(m):
+            if name.endswith(("_bucket", "_sum")):
+                continue
+            for labels, val in m[name]:
+                lbl = ("{" + ",".join(f"{k}={v}" for k, v in
+                                      sorted(labels.items())) + "}"
+                       if labels else "")
+                out(f"  {name}{lbl} = {val:g}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarise / validate / convert obs artifacts")
+    ap.add_argument("--trace", default=None,
+                    help="span JSONL (REPRO_TRACE_FILE / --trace-file)")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics dump (.prom text exposition or .json)")
+    ap.add_argument("--chrome", default=None, metavar="OUT",
+                    help="also write the trace as Chrome trace_event "
+                         "JSON (Perfetto-loadable)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate span completeness only; exit 1 on any "
+                         "violation (CI smoke gate)")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to do: pass --trace and/or --metrics")
+    if (args.chrome or args.check) and not args.trace:
+        ap.error("--chrome/--check need --trace")
+    if args.check:
+        events = tracing.load_jsonl(args.trace)
+        try:
+            spans = tracing.validate_spans(events)
+        except ValueError as e:
+            print(f"[obs-report] FAIL: {e}")
+            return 1
+        n = sum(len(v) for v in spans.values())
+        print(f"[obs-report] OK: {len(spans)} uids, {n} complete "
+              f"request span trees")
+        if args.chrome:
+            tracing.write_chrome(events, args.chrome)
+            print(f"[obs-report] chrome trace: {args.chrome}")
+        return 0
+    print_report(args.trace, args.metrics)
+    if args.chrome:
+        tracing.write_chrome(tracing.load_jsonl(args.trace), args.chrome)
+        print(f"[obs-report] chrome trace: {args.chrome}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
