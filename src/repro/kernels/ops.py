@@ -36,6 +36,7 @@ asserting.
 from __future__ import annotations
 
 from repro.kernels import backend, ref
+from repro.obs import devstats as obs_devstats
 
 
 def set_default_backend(use_pallas: bool | None) -> None:
@@ -52,10 +53,11 @@ def short_conv(x, filt, causal: bool, *, use_pallas=None, interpret=None):
     ref.short_conv_ref; the Pallas kernel tiles the sequence with an
     (m-1)-halo. Backward: flipped taps + mirrored offset for the signal,
     ``conv_tap_grad`` correlation for the taps."""
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import short_conv as k
-        return k.short_conv_pallas(x, filt, causal, interpret=interpret)
-    return ref.short_conv_ref(x, filt, causal)
+    with obs_devstats.kernel_region("short_conv"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import short_conv as k
+            return k.short_conv_pallas(x, filt, causal, interpret=interpret)
+        return ref.short_conv_ref(x, filt, causal)
 
 
 def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=None):
@@ -67,10 +69,12 @@ def interp_reduce(x, idx_lo, w_lo, r: int, *, use_pallas=None, interpret=None):
     from the uniform grid); returns (b, r, d) in x's dtype. Oracle:
     ref.interp_reduce_ref. Backward: one :func:`interp_expand` launch
     (W is linear, so the adjoint is the sibling kernel)."""
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import interp_matvec as k
-        return k.interp_reduce_pallas(x, idx_lo, w_lo, r, interpret=interpret)
-    return ref.interp_reduce_ref(x, idx_lo, w_lo, r)
+    with obs_devstats.kernel_region("interp_reduce"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import interp_matvec as k
+            return k.interp_reduce_pallas(x, idx_lo, w_lo, r,
+                                          interpret=interpret)
+        return ref.interp_reduce_ref(x, idx_lo, w_lo, r)
 
 
 def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=None):
@@ -80,10 +84,12 @@ def interp_expand(z, idx_lo, w_lo, *, use_pallas=None, interpret=None):
     :func:`interp_reduce` (n is read off idx_lo); returns (b, n, d) in
     z's dtype. Oracle: ref.interp_expand_ref. Backward: one
     :func:`interp_reduce` launch."""
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import interp_matvec as k
-        return k.interp_expand_pallas(z, idx_lo, w_lo, interpret=interpret)
-    return ref.interp_expand_ref(z, idx_lo, w_lo)
+    with obs_devstats.kernel_region("interp_expand"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import interp_matvec as k
+            return k.interp_expand_pallas(z, idx_lo, w_lo,
+                                          interpret=interpret)
+        return ref.interp_expand_ref(z, idx_lo, w_lo)
 
 
 def ski_fused_pass2(x, z, a_dense, filt, causal: bool, *, use_pallas=None,
@@ -96,11 +102,12 @@ def ski_fused_pass2(x, z, a_dense, filt, causal: bool, *, use_pallas=None,
     (z is an already-materialised intermediate); the trainable form is
     :func:`ski_fused_tno`.
     """
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import ski_fused as k
-        return k.ski_fused_pass2_pallas(x, z, a_dense, filt, causal,
-                                        interpret=interpret)
-    return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
+    with obs_devstats.kernel_region("ski_fused"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import ski_fused as k
+            return k.ski_fused_pass2_pallas(x, z, a_dense, filt, causal,
+                                            interpret=interpret)
+        return ref.ski_fused_pass2_ref(x, z, a_dense, filt, causal)
 
 
 def ski_fused_tno(x, a_dense, filt, idx_lo, w_lo, r: int, causal: bool, *,
@@ -117,11 +124,14 @@ def ski_fused_tno(x, a_dense, filt, idx_lo, w_lo, r: int, causal: bool, *,
     ``REPRO_PALLAS_GRAD`` knob (kernels/backend.py) can force the
     reference cotangent formulas under the Pallas forward for debugging.
     """
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import ski_vjp as k
-        return k.ski_fused_tno_pallas(x, a_dense, filt, int(r), bool(causal),
-                                      backend.resolve_interpret(interpret))
-    return ref.ski_fused_tno_ref(x, a_dense, filt, idx_lo, w_lo, r, causal)
+    with obs_devstats.kernel_region("ski_fused"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import ski_vjp as k
+            return k.ski_fused_tno_pallas(x, a_dense, filt, int(r),
+                                          bool(causal),
+                                          backend.resolve_interpret(interpret))
+        return ref.ski_fused_tno_ref(x, a_dense, filt, idx_lo, w_lo, r,
+                                     causal)
 
 
 def ski_fused_tno_coef(x, a_coef, filt, idx_lo, w_lo, r: int, causal: bool,
@@ -140,13 +150,14 @@ def ski_fused_tno_coef(x, a_coef, filt, idx_lo, w_lo, r: int, causal: bool,
     windowed kernel with the band transposed (coefficients lag-flipped)
     and the conv offset mirrored (kernels/ski_vjp.py).
     """
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import ski_vjp as k
-        return k.ski_fused_tno_coef_pallas(
-            x, a_coef, filt, int(r), bool(causal), str(variant),
-            backend.resolve_interpret(interpret))
-    return ref.ski_fused_tno_coef_ref(x, a_coef, filt, idx_lo, w_lo, r,
-                                      causal)
+    with obs_devstats.kernel_region(f"ski_{variant}"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import ski_vjp as k
+            return k.ski_fused_tno_coef_pallas(
+                x, a_coef, filt, int(r), bool(causal), str(variant),
+                backend.resolve_interpret(interpret))
+        return ref.ski_fused_tno_coef_ref(x, a_coef, filt, idx_lo, w_lo, r,
+                                          causal)
 
 
 def fd_tno(x, khat_real, *, use_pallas=None, interpret=None):
@@ -165,11 +176,12 @@ def fd_tno(x, khat_real, *, use_pallas=None, interpret=None):
     (counters in fd_fused assert no silent ref fallback). On the
     reference path plain autodiff through ref.fd_tno_ref applies.
     """
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import fd_fused as k
-        return k.fd_tno_pallas(x, khat_real,
-                               backend.resolve_interpret(interpret))
-    return ref.fd_tno_ref(x, khat_real)
+    with obs_devstats.kernel_region("fd_tno"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import fd_fused as k
+            return k.fd_tno_pallas(x, khat_real,
+                                   backend.resolve_interpret(interpret))
+        return ref.fd_tno_ref(x, khat_real)
 
 
 def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
@@ -184,10 +196,12 @@ def ssd_scan(x, dt, a, b, c, d_skip, *, chunk=64, use_pallas=None,
     the chunked intra/inter-state formulation with ``chunk``-length
     blocks. ``hshard`` re-asserts head-axis TP sharding on the
     chunk-state carry (reference path; see ssd_chunked docstring)."""
-    if backend.resolve_use_pallas(use_pallas):
-        from repro.kernels import ssd_scan as k
-        return k.ssd_scan_pallas(x, dt, a, b, c, d_skip, chunk=chunk,
-                                 interpret=backend.resolve_interpret(interpret))
-    from repro.kernels import ssd_chunked
-    return ssd_chunked.ssd_scan_chunked(x, dt, a, b, c, d_skip, chunk=chunk,
-                                        hshard=hshard)
+    with obs_devstats.kernel_region("ssd"):
+        if backend.resolve_use_pallas(use_pallas):
+            from repro.kernels import ssd_scan as k
+            return k.ssd_scan_pallas(
+                x, dt, a, b, c, d_skip, chunk=chunk,
+                interpret=backend.resolve_interpret(interpret))
+        from repro.kernels import ssd_chunked
+        return ssd_chunked.ssd_scan_chunked(x, dt, a, b, c, d_skip,
+                                            chunk=chunk, hshard=hshard)

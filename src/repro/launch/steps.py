@@ -82,6 +82,11 @@ class StepBuilder:
                        seq_shard_resid=mesh is not None)
         self._axes_tree = None
         self._jit_steps: Dict[Any, Any] = {}
+        # compile watchdog over the memoised steps (ISSUE 10): one
+        # executable per (kind, shape) key — a second trace of the same
+        # key means the memoisation broke
+        from repro.obs import compilewatch as obs_compile
+        self.compile_watch = obs_compile.CompileWatch(prefix="steps.")
 
     # ------------------------------------------------------------ params
     def abstract_params(self):
@@ -194,14 +199,20 @@ class StepBuilder:
         a full trace+compile per generation)."""
         key = ("serve", shape.name if shape else None)
         if key not in self._jit_steps:
-            self._jit_steps[key] = jax.jit(self.make_serve_step(shape))
+            name = f"serve:{shape.name if shape else 'default'}"
+            self.compile_watch.expect(name, 1)
+            self._jit_steps[key] = self.compile_watch.wrap(
+                name, self.make_serve_step(shape))
         return self._jit_steps[key]
 
     def chunk_step_jit(self, shape: Optional[ShapeSpec] = None):
         """Memoised ``jax.jit`` of :meth:`make_chunk_step`."""
         key = ("chunk", shape.name if shape else None)
         if key not in self._jit_steps:
-            self._jit_steps[key] = jax.jit(self.make_chunk_step(shape))
+            name = f"chunk:{shape.name if shape else 'default'}"
+            self.compile_watch.expect(name, 1)
+            self._jit_steps[key] = self.compile_watch.wrap(
+                name, self.make_chunk_step(shape))
         return self._jit_steps[key]
 
     # ------------------------------------------------------- input specs

@@ -57,10 +57,35 @@ def main(argv=None):
     ap.add_argument("--data-path", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="dump the obs metrics registry on exit "
+                         "(.json = JSON dump, anything else = Prometheus "
+                         "text exposition); also installs the registry as "
+                         "the process default so kernel dispatch / compile "
+                         "watchdog counters land in it (same contract as "
+                         "launch/serve.py)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="stream train_step span events to PATH as JSONL "
+                         "and write a Chrome trace_event export "
+                         "(PATH + '.chrome.json') on exit")
     args = ap.parse_args(argv)
 
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()           # multi-host fleet entry
+
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+    reg = None
+    if args.metrics_file is not None:
+        reg = obs_metrics.Registry()
+        # process default too: backend dispatch counters, the StepBuilder
+        # compile watchdog, and the Trainer's own counters all report
+        # into the same dump (parity with launch/serve.py)
+        obs_metrics.set_default_registry(reg)
+    tracer = (obs_tracing.Tracer(args.trace_file)
+              if args.trace_file is not None else None)
+    if tracer is not None:
+        obs_tracing.set_default_tracer(tracer)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -82,9 +107,30 @@ def main(argv=None):
         host_id=jax.process_index(), num_hosts=jax.process_count())
 
     state_sh = sb.state_shardings()
-    train_step = jax.jit(sb.make_train_step(),
-                         in_shardings=(state_sh, None),
-                         out_shardings=(state_sh, None))
+    # compile watchdog over the trainer's jit entry point: exactly one
+    # trace is expected for the whole run (the batch/seq shapes are
+    # fixed); a retrace mid-run means shape churn and shows up as
+    # repro_compiles_total{fn="train.train_step"} > 1 plus a warning
+    from repro.obs import compilewatch as obs_compile
+    watch = obs_compile.CompileWatch(prefix="train.")
+    watch.expect("train_step", 1)
+    train_step = watch.wrap("train_step", sb.make_train_step(),
+                            in_shardings=(state_sh, None),
+                            out_shardings=(state_sh, None))
+    if tracer is not None:
+        import itertools
+        inner_step, counter = train_step, itertools.count()
+
+        def train_step(state, batch):
+            i = next(counter)
+            tracer.begin("train_step", step=i)
+            out = inner_step(state, batch)
+            # sync before ending the span so the duration is device time,
+            # not dispatch time (the Trainer syncs on the loss right
+            # after anyway — this costs nothing extra)
+            jax.block_until_ready(out[1])
+            tracer.end("train_step", step=i)
+            return out
 
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -111,6 +157,21 @@ def main(argv=None):
     print(f"[train] {steps_done} steps in {dt:.1f}s "
           f"({steps_done / dt:.2f} it/s); final metrics: "
           f"{ {k: float(v) for k, v in trainer.metrics_history[-1].items()} }")
+    if watch.count("train_step") > 1:
+        print(f"[train] WARNING: train_step retraced "
+              f"{watch.count('train_step')}x (expected 1 compile)")
+    if tracer is not None:
+        tracer.close()
+        chrome = args.trace_file + ".chrome.json"
+        obs_tracing.write_chrome(tracer.events, chrome)
+        print(f"[train] trace: {args.trace_file} (JSONL), "
+              f"{chrome} (Perfetto)")
+    if reg is not None and args.metrics_file is not None:
+        if args.metrics_file.endswith(".json"):
+            reg.dump_json(args.metrics_file)
+        else:
+            reg.dump_prometheus(args.metrics_file)
+        print(f"[train] metrics: {args.metrics_file}")
     return 0
 
 

@@ -1,0 +1,145 @@
+"""Compile/retrace watchdog for memoised jit entry points (ISSUE 10
+tentpole §3).
+
+Every jit-compiled serving/training entry point in this repo is
+shape-memoised by construction: the engine keeps ≤ 2 executables per
+(batch, bucket) prefill shape, the StepBuilder one per serve-shape, the
+trainer exactly one. A retrace outside those families is a silent
+performance outage — each one costs seconds of XLA time on the hot
+path and the old ``trace_counts`` dicts only surfaced it if a test
+happened to look.
+
+:class:`CompileWatch` wraps ``jax.jit`` so every *fresh trace* is:
+
+* counted into ``repro_compiles_total{fn}``,
+* timed into the ``repro_compile_seconds{fn}`` histogram (trace +
+  compile + first execution — the latency a request actually felt),
+* checked against the expected ceiling declared via :meth:`expect`,
+  warning through the obs logger the moment a function exceeds its
+  shape-family budget.
+
+Detection reuses the repo's own retrace-pinning idiom (the engine's
+``_make`` counted wrappers): a host-side side effect inside the traced
+body fires exactly when JAX traces, never on cached executions. The
+wrapper stays compatible with those counters — pass the already-counted
+body in, both fire on the same trace.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+
+#: compile latencies span ~50ms (tiny CPU smoke graphs) to minutes
+#: (real-TPU Mosaic builds) — wider than the serving-latency default
+COMPILE_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+                   60.0, 120.0, 300.0)
+
+
+class CompileWatch:
+    """Watches a family of jit entry points for compiles/retraces.
+
+    ``wrap(name, fn, **jit_kwargs)`` returns a callable with the same
+    signature as ``jax.jit(fn, **jit_kwargs)``; ``expect(name, n)``
+    declares the shape-family ceiling (the warning threshold — counting
+    is unconditional). ``counts()`` is the host-side mirror for tests.
+    """
+
+    def __init__(self, metrics=None, *, prefix: str = "",
+                 logger=None):
+        reg = metrics if metrics is not None \
+            else obs_metrics.default_registry()
+        self.prefix = prefix
+        self._m_compiles = reg.counter(
+            "repro_compiles_total",
+            "fresh jit traces (compiles) per wrapped entry point",
+            ("fn",))
+        self._m_seconds = reg.histogram(
+            "repro_compile_seconds",
+            "wall seconds of calls that triggered a fresh trace "
+            "(trace + compile + first run)",
+            ("fn",), buckets=COMPILE_BUCKETS)
+        self._log = logger or obs_log.get_logger("obs")
+        self._lock = threading.Lock()
+        self._counts: Dict[str, int] = {}
+        self._expected: Dict[str, int] = {}
+        self._tl = threading.local()
+
+    # ------------------------------------------------------------ config
+    def expect(self, name: str, max_traces: int) -> None:
+        """Declare the retrace budget: warn when ``name`` exceeds it."""
+        self._expected[name] = int(max_traces)
+
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counts)
+
+    def count(self, name: str) -> int:
+        with self._lock:
+            return self._counts.get(name, 0)
+
+    # ---------------------------------------------------------- recording
+    def _record(self, name: str, seconds: Optional[float]) -> None:
+        with self._lock:
+            self._counts[name] = n = self._counts.get(name, 0) + 1
+        label = self.prefix + name
+        self._m_compiles.labels(fn=label).inc()
+        if seconds is not None:
+            self._m_seconds.labels(fn=label).observe(seconds)
+        exp = self._expected.get(name)
+        if exp is not None and n > exp:
+            self._log.warning(
+                f"compile watchdog: {label} retraced ({n} traces > "
+                f"expected {exp}) — a shape outside the memoised family "
+                "reached this entry point")
+
+    def _mark(self, name: str) -> None:
+        """Called from inside a traced body: flag the innermost live
+        call frame for ``name``. A trace with no live frame (AOT
+        ``.lower()``, warmup helpers) still counts, just untimed."""
+        stack = getattr(self._tl, "stack", None)
+        if stack:
+            for frame_name, cell in reversed(stack):
+                if frame_name == name:
+                    cell["traced"] = True
+                    return
+        self._record(name, None)
+
+    # ------------------------------------------------------------- wrap
+    def wrap(self, name: str, fn: Callable, **jit_kwargs) -> Callable:
+        """``jax.jit`` with compile accounting. ``fn`` may already be a
+        counted wrapper (the engine's ``_make``) — its side effect and
+        this watchdog's fire on the same trace."""
+        import jax
+
+        def traced_body(*args, **kwargs):
+            self._mark(name)
+            return fn(*args, **kwargs)
+
+        jitted = jax.jit(traced_body, **jit_kwargs)
+
+        @functools.wraps(fn)
+        def call(*args, **kwargs):
+            stack = getattr(self._tl, "stack", None)
+            if stack is None:
+                stack = self._tl.stack = []
+            cell = {"traced": False}
+            stack.append((name, cell))
+            t0 = time.perf_counter()
+            try:
+                return jitted(*args, **kwargs)
+            finally:
+                stack.pop()
+                if cell["traced"]:
+                    self._record(name, time.perf_counter() - t0)
+
+        call.watch_name = name
+        call.jitted = jitted
+        return call
+
+
+__all__ = ["CompileWatch", "COMPILE_BUCKETS"]

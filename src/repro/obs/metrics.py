@@ -35,12 +35,14 @@ collision would corrupt the exposition).
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import threading
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 _ENV_METRICS = "REPRO_METRICS"
+_ENV_METRICS_FILE = "REPRO_METRICS_FILE"
 
 #: default histogram buckets (seconds) — serving latencies span ~100µs
 #: (one CPU smoke decode step) to ~10s (a cold packed prefill compile)
@@ -364,26 +366,60 @@ NULL_REGISTRY = NullRegistry()
 
 _default: Registry | NullRegistry | None = None
 _default_lock = threading.Lock()
+_atexit_registered = False
+
+
+def _dump_default_registry() -> None:
+    """atexit hook: final metrics dump to ``REPRO_METRICS_FILE`` —
+    without it a process that exits mid-run (chaos kills, cron smoke
+    jobs) leaves no exposition at all (ISSUE 10 satellite). ``.json``
+    suffix selects the JSON mirror, anything else the Prometheus text
+    format (matching ``launch/serve.py --metrics-file``)."""
+    path = os.environ.get(_ENV_METRICS_FILE)
+    with _default_lock:
+        reg = _default
+    if not path or reg is None:
+        return
+    try:
+        if path.endswith(".json"):
+            reg.dump_json(path)
+        else:
+            reg.dump_prometheus(path)
+    except Exception:  # noqa: BLE001 — never fail interpreter exit
+        pass
 
 
 def default_registry():
     """The process-wide registry: real when ``REPRO_METRICS`` is truthy
-    at first use, else the shared :data:`NULL_REGISTRY`. Explicit
-    registries passed to Scheduler/Engine/Trainer bypass this."""
-    global _default
+    at first use (or when ``REPRO_METRICS_FILE`` names a final dump
+    target, which implies metrics), else the shared
+    :data:`NULL_REGISTRY`. Explicit registries passed to
+    Scheduler/Engine/Trainer bypass this. When ``REPRO_METRICS_FILE``
+    is set, an ``atexit`` hook writes the final exposition there."""
+    global _default, _atexit_registered
     if _default is None:
         with _default_lock:
             if _default is None:
-                _default = Registry() if metrics_enabled() else NULL_REGISTRY
+                want = metrics_enabled() or bool(
+                    os.environ.get(_ENV_METRICS_FILE))
+                _default = Registry() if want else NULL_REGISTRY
+                if want and not _atexit_registered:
+                    atexit.register(_dump_default_registry)
+                    _atexit_registered = True
     return _default
 
 
 def set_default_registry(reg) -> None:
     """Programmatic override (tests, launchers); None re-resolves from
-    the environment on next use."""
-    global _default
+    the environment on next use. The final-dump atexit hook follows
+    whatever the default is at exit."""
+    global _default, _atexit_registered
     with _default_lock:
         _default = reg
+        if reg is not None and not _atexit_registered and \
+                os.environ.get(_ENV_METRICS_FILE):
+            atexit.register(_dump_default_registry)
+            _atexit_registered = True
 
 
 class MirroredCounts(dict):

@@ -40,6 +40,7 @@ CI gate, and ``tools/obs_report.py``.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import threading
@@ -139,13 +140,30 @@ class Tracer:
 
 _default: Optional[Tracer] = None
 _default_lock = threading.Lock()
+_atexit_registered = False
+
+
+def _close_default_tracer() -> None:
+    """atexit hook: flush+close whatever the default tracer is *now* —
+    the JSONL writer batches :attr:`Tracer.FLUSH_EVERY` events, so a
+    process that exits without ``close()`` would silently drop the tail
+    of the trace (ISSUE 10 satellite bugfix)."""
+    with _default_lock:
+        t = _default
+    if t is not None:
+        try:
+            t.close()
+        except Exception:  # noqa: BLE001 — never fail interpreter exit
+            pass
 
 
 def default_tracer() -> Optional[Tracer]:
     """Process-wide tracer writing to ``REPRO_TRACE_FILE`` (None when the
     env is unset — tracing is opt-in). Explicit tracers passed to the
-    Scheduler bypass this."""
-    global _default
+    Scheduler bypass this. The first creation registers an ``atexit``
+    close so the batched JSONL tail survives an exit without an explicit
+    ``close()``."""
+    global _default, _atexit_registered
     if _default is None:
         path = os.environ.get(_ENV_TRACE)
         if not path:
@@ -153,13 +171,19 @@ def default_tracer() -> Optional[Tracer]:
         with _default_lock:
             if _default is None:
                 _default = Tracer(path)
+                if not _atexit_registered:
+                    atexit.register(_close_default_tracer)
+                    _atexit_registered = True
     return _default
 
 
 def set_default_tracer(tracer: Optional[Tracer]) -> None:
-    global _default
+    global _default, _atexit_registered
     with _default_lock:
         _default = tracer
+        if tracer is not None and not _atexit_registered:
+            atexit.register(_close_default_tracer)
+            _atexit_registered = True
 
 
 # ---------------------------------------------------------------- loading

@@ -156,20 +156,42 @@ class Engine:
                             "jitted engine fn retraces (trace_counts)",
                             ("fn",)),
                 "fn")
-        self._generate = jax.jit(self._make("generate", self._generate_fn))
-        self._insert = jax.jit(self._make("insert", self._insert_fn))
-        self._insert_from = jax.jit(
-            self._make("insert_from", self._insert_from_fn))
-        self._decode1 = jax.jit(self._make("decode1", self._decode1_fn))
-        self._chunk1 = (jax.jit(self._make("chunk1", self._chunk1_fn))
+        # every jit entry point runs under the compile watchdog (ISSUE 10
+        # tentpole §3): fresh traces land in repro_compiles_total{fn} + a
+        # compile-seconds histogram, and exceeding the declared shape
+        # family warns. The `_make` counted wrappers still fire on the
+        # same traces, so `trace_counts` stays the test-pinned mirror.
+        from repro.obs import compilewatch as obs_compile
+        w = self.compile_watch = obs_compile.CompileWatch(
+            metrics=reg, prefix="engine.")
+        self._generate = w.wrap(
+            "generate", self._make("generate", self._generate_fn))
+        self._insert = w.wrap(
+            "insert", self._make("insert", self._insert_fn))
+        self._insert_from = w.wrap(
+            "insert_from", self._make("insert_from", self._insert_from_fn))
+        self._decode1 = w.wrap(
+            "decode1", self._make("decode1", self._decode1_fn))
+        self._chunk1 = (w.wrap("chunk1",
+                               self._make("chunk1", self._chunk1_fn))
                         if self._chunk_c else None)
         # n_tok (the token-remainder phase length) is static: the
         # C-aligned fast path (n_tok=0, whole-chunk prompts) and the
         # general path (n_tok=C) are separate executables — at most two
         # per (batch, bucket) pair
-        self._prefill_bucket = jax.jit(
+        self._prefill_bucket = w.wrap(
+            "prefill_bucket",
             self._make("prefill_bucket", self._prefill_bucket_fn),
             static_argnums=(5,))
+        # retrace budgets: decode1/generate batch over all S slots (one
+        # executable each; 2 allows a dtype/donation variant), packed
+        # prefill ≤ 2 executables per (batch, bucket). insert/chunk1
+        # legitimately trace per prompt length on the unbucketed path,
+        # so they are counted but not budgeted.
+        w.expect("generate", 2)
+        w.expect("decode1", 2)
+        w.expect("prefill_bucket",
+                 2 * max(len(self.buckets), 1) * max(self.slots, 1))
 
     # ------------------------------------------------------------ plumbing
     def _make(self, name, fn):

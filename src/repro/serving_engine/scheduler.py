@@ -242,7 +242,8 @@ class Scheduler:
                  sleep: Callable[[float], None] = time.sleep,
                  log: Optional[Callable[[str], None]] = None,
                  metrics=None,
-                 tracer: Optional[obs_tracing.Tracer] = None):
+                 tracer: Optional[obs_tracing.Tracer] = None,
+                 mem_sample_every: Optional[int] = None):
         if admission not in ("reject", "block"):
             raise ValueError(f"admission={admission!r}: "
                              "expected 'reject' or 'block'")
@@ -288,6 +289,15 @@ class Scheduler:
         self._obs_on = (self.tracer is not None or
                         not isinstance(self.metrics,
                                        obs_metrics.NullRegistry))
+        # periodic HBM/live-buffer gauges (ISSUE 10 tentpole §3b):
+        # every N decode steps sample live device bytes + DecodeState
+        # cache/fd-stream bytes. 0 = off (the default; the sample walks
+        # the cache tree on the host, so it stays opt-in).
+        if mem_sample_every is None:
+            from repro.obs import devstats as obs_devstats
+            mem_sample_every = (obs_devstats.mem_sample_every()
+                                if self._obs_on else 0)
+        self.mem_sample_every = int(mem_sample_every)
         m = self.metrics
         self._m_submitted = m.counter(
             "repro_requests_submitted_total", "requests accepted by submit()")
@@ -909,6 +919,10 @@ class Scheduler:
             free = list(range(eng.slots))[::-1]  # pop() admits slot 0 first
             slot_req = {}
         self.preempted = False
+        # per-drain cache for sample_memory's pytree byte sums: the
+        # decode cache is fixed-shape for the whole drain, so only the
+        # live-array total is re-measured at each sampling step
+        self._mem_reuse: dict = {}
         self._install_signals()
         if self.detok_async and self._detok is None:
             self._detok = _DetokWorker(self, self.detok_cap)
@@ -981,6 +995,11 @@ class Scheduler:
                         del slot_req[slot]
                         free.append(slot)
                 self._observe_counters(len(slot_req))
+                if (self.mem_sample_every
+                        and self.steps % self.mem_sample_every == 0):
+                    from repro.obs import devstats as obs_devstats
+                    obs_devstats.sample_memory(self.metrics, state,
+                                               reuse=self._mem_reuse)
                 if (self.snapshot_every and not self.preempted
                         and self.steps % self.snapshot_every == 0):
                     self._snapshot(state, slot_req, free)

@@ -1,0 +1,300 @@
+#!/usr/bin/env python
+"""Append-only benchmark history + rolling-median drift gate (ISSUE 10).
+
+The three BENCH_*.json files are overwritten on every run, so the perf
+trajectory across PRs was empty — a regression just read as "the new
+number". This tool gives every BENCH run a durable record and turns the
+committed history into a CI gate:
+
+* ``append BENCH_engine.json``   — extract the drift-gated metrics from
+  the payload and append one JSONL record (git sha, platform, UTC
+  timestamp, metrics) to ``benchmarks/history/<bench>.jsonl``.
+* ``check BENCH_engine.json``    — compare the fresh payload against a
+  **rolling median of the last K same-platform records** (default K=5);
+  exit 1 when any metric drifts past its threshold in the bad
+  direction. Medians are robust to one noisy run; same-platform
+  filtering keeps CPU smoke numbers from gating TPU runs.
+* ``show [bench]``               — print the trend per metric (n, first,
+  median, last).
+
+Gated metrics are *mostly ratios* (speedups, overhead fractions), which
+are stable across host load; absolute tok/s is tracked but gated at a
+generous threshold. Direction is per metric: ``higher`` fails on drops,
+``lower`` on rises. Metrics with an ``abs`` entry use an absolute slack
+instead of a relative one (overhead_frac lives near 0 where relative
+thresholds are meaningless).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import pathlib
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+HISTORY_DIR = ROOT / "benchmarks" / "history"
+
+#: drift-gate config: bench -> metric -> {direction, threshold | abs}
+#: threshold = max relative drift vs the rolling median (0.2 = 20%);
+#: abs = absolute slack instead (for near-zero metrics)
+GATES: Dict[str, Dict[str, dict]] = {
+    "engine": {
+        "engine_tok_s_S16": {"direction": "higher", "threshold": 0.5},
+        "speedup_S16": {"direction": "higher", "threshold": 0.2},
+        "prefill_pack_speedup": {"direction": "higher", "threshold": 0.2},
+        "obs_overhead_frac": {"direction": "lower", "abs": 0.05},
+        "obs_attr_coverage": {"direction": "higher", "abs": 0.1},
+    },
+    "ski_fused_vs_unfused": {
+        "fwd_speedup_min": {"direction": "higher", "threshold": 0.2},
+        "bwd_speedup_min": {"direction": "higher", "threshold": 0.2},
+        "large_r_fwd_speedup_max": {"direction": "higher",
+                                    "threshold": 0.2},
+    },
+    "fd_fused": {
+        "fwd_speedup_min": {"direction": "higher", "threshold": 0.2},
+        "decode_stream_speedup": {"direction": "higher", "threshold": 0.2},
+        "decode_stream_tok_s": {"direction": "higher", "threshold": 0.5},
+    },
+}
+
+
+# ------------------------------------------------------------ extraction
+def _safe_min(xs: List[float]) -> Optional[float]:
+    xs = [x for x in xs if x is not None]
+    return min(xs) if xs else None
+
+
+def extract_metrics(payload: dict) -> Dict[str, float]:
+    """Pull the drift-gated metrics out of one BENCH payload. Tolerant
+    of missing sections (older payloads lack ``obs``): absent metrics
+    are simply not recorded, and the gate skips them."""
+    bench = payload.get("bench", "")
+    out: Dict[str, float] = {}
+    if bench == "engine":
+        for row in payload.get("results", []):
+            if row.get("slots") == 16:
+                out["engine_tok_s_S16"] = row["engine_tok_s"]
+                out["speedup_S16"] = row["speedup"]
+        pre = payload.get("prefill") or {}
+        if "speedup" in pre:
+            out["prefill_pack_speedup"] = pre["speedup"]
+        obs = payload.get("obs") or {}
+        if "overhead_frac" in obs:
+            out["obs_overhead_frac"] = obs["overhead_frac"]
+        if "attributed_coverage" in obs:
+            out["obs_attr_coverage"] = obs["attributed_coverage"]
+    elif bench == "ski_fused_vs_unfused":
+        v = _safe_min([r.get("speedup_vs_4launch")
+                       for r in payload.get("results", [])])
+        if v is not None:
+            out["fwd_speedup_min"] = v
+        v = _safe_min([r.get("bwd_speedup_vs_unfused")
+                       for r in payload.get("bwd", [])])
+        if v is not None:
+            out["bwd_speedup_min"] = v
+        lr = [r.get("fwd_speedup_vs_dense")
+              for r in payload.get("large_r", [])]
+        lr = [x for x in lr if x is not None]
+        if lr:
+            out["large_r_fwd_speedup_max"] = max(lr)
+    elif bench == "fd_fused":
+        v = _safe_min([r.get("speedup_vs_4launch")
+                       for r in payload.get("results", [])])
+        if v is not None:
+            out["fwd_speedup_min"] = v
+        for r in payload.get("decode", []):
+            if "speedup" in r:
+                out["decode_stream_speedup"] = r["speedup"]
+            if "stream_tok_s" in r:
+                out["decode_stream_tok_s"] = r["stream_tok_s"]
+    else:
+        raise SystemExit(f"bench_history: unknown bench {bench!r} "
+                         f"(known: {sorted(GATES)})")
+    return out
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def make_record(payload: dict, *, sha: Optional[str] = None,
+                timestamp: Optional[str] = None) -> dict:
+    return {
+        "bench": payload.get("bench", ""),
+        "sha": sha if sha is not None else git_sha(),
+        "platform": payload.get("platform", "unknown"),
+        "timestamp": timestamp if timestamp is not None
+        else datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "metrics": extract_metrics(payload),
+    }
+
+
+# --------------------------------------------------------------- history
+def history_path(bench: str,
+                 history_dir: Optional[pathlib.Path] = None) -> pathlib.Path:
+    return (history_dir or HISTORY_DIR) / f"{bench}.jsonl"
+
+
+def load_history(bench: str,
+                 history_dir: Optional[pathlib.Path] = None) -> List[dict]:
+    p = history_path(bench, history_dir)
+    if not p.exists():
+        return []
+    out = []
+    with open(p) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except ValueError as e:
+                raise SystemExit(f"{p}:{i}: bad history line: {e}")
+    return out
+
+
+def append_record(record: dict,
+                  history_dir: Optional[pathlib.Path] = None
+                  ) -> pathlib.Path:
+    p = history_path(record["bench"], history_dir)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return p
+
+
+# ------------------------------------------------------------ drift gate
+def _median(xs: List[float]) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    mid = n // 2
+    return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def check_drift(record: dict, history: List[dict], *, window: int = 5
+                ) -> List[dict]:
+    """Compare one record against the rolling median of the last
+    ``window`` same-platform history records. Returns a list of failure
+    dicts (empty = gate passes): ``{"metric", "value", "baseline",
+    "drift", "limit", "direction"}``. Metrics with no history (or not in
+    the gate table) pass — the first committed record *is* the
+    baseline."""
+    gates = GATES.get(record["bench"], {})
+    same = [r for r in history
+            if r.get("platform") == record.get("platform")]
+    failures = []
+    for metric, gate in gates.items():
+        value = record["metrics"].get(metric)
+        if value is None:
+            continue
+        past = [r["metrics"][metric] for r in same[-window:]
+                if metric in r.get("metrics", {})]
+        if not past:
+            continue
+        baseline = _median(past)
+        direction = gate["direction"]
+        if "abs" in gate:
+            drift = value - baseline
+            bad = (drift < -gate["abs"] if direction == "higher"
+                   else drift > gate["abs"])
+            limit = gate["abs"]
+        else:
+            if baseline == 0:
+                continue
+            drift = value / baseline - 1.0
+            bad = (drift < -gate["threshold"] if direction == "higher"
+                   else drift > gate["threshold"])
+            limit = gate["threshold"]
+        if bad:
+            failures.append({"metric": metric, "value": value,
+                             "baseline": baseline, "drift": drift,
+                             "limit": limit, "direction": direction})
+    return failures
+
+
+# ------------------------------------------------------------------- CLI
+def cmd_append(args) -> int:
+    payload = json.load(open(args.json_path))
+    rec = make_record(payload, sha=args.sha)
+    p = append_record(rec, args.history_dir)
+    print(f"bench_history: appended {rec['bench']} @ {rec['sha']} "
+          f"({len(rec['metrics'])} metrics) -> {p}")
+    return 0
+
+
+def cmd_check(args) -> int:
+    payload = json.load(open(args.json_path))
+    rec = make_record(payload, sha=args.sha)
+    history = load_history(rec["bench"], args.history_dir)
+    failures = check_drift(rec, history, window=args.window)
+    same = [r for r in history
+            if r.get("platform") == rec.get("platform")]
+    print(f"bench_history: {rec['bench']} vs {len(same)} same-platform "
+          f"record(s), window={args.window}")
+    for m, v in sorted(rec["metrics"].items()):
+        past = [r["metrics"][m] for r in same[-args.window:]
+                if m in r.get("metrics", {})]
+        base = f"{_median(past):.4g}" if past else "n/a"
+        print(f"  {m:28s} {v:.4g}  (baseline {base})")
+    if failures:
+        for f in failures:
+            print(f"DRIFT: {f['metric']} = {f['value']:.4g} vs rolling "
+                  f"median {f['baseline']:.4g} "
+                  f"(drift {f['drift']:+.2%}, limit {f['limit']:g}, "
+                  f"want {f['direction']})")
+        return 1
+    print("bench_history: drift gate OK")
+    return 0
+
+
+def cmd_show(args) -> int:
+    benches = [args.bench] if args.bench else sorted(
+        p.stem for p in (args.history_dir or HISTORY_DIR).glob("*.jsonl"))
+    for bench in benches:
+        history = load_history(bench, args.history_dir)
+        print(f"== {bench} ({len(history)} records)")
+        metrics = sorted({m for r in history for m in r.get("metrics", {})})
+        for m in metrics:
+            xs = [(r["sha"], r["metrics"][m]) for r in history
+                  if m in r.get("metrics", {})]
+            vals = [v for _, v in xs]
+            print(f"  {m:28s} n={len(vals):3d} first={vals[0]:.4g} "
+                  f"median={_median(vals):.4g} last={vals[-1]:.4g} "
+                  f"(@{xs[-1][0]})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history-dir", type=pathlib.Path, default=None,
+                    help=f"history directory (default {HISTORY_DIR})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("append", help="append one record from a BENCH json")
+    p.add_argument("json_path")
+    p.add_argument("--sha", default=None)
+    p.set_defaults(fn=cmd_append)
+    p = sub.add_parser("check", help="drift-gate a BENCH json vs history")
+    p.add_argument("json_path")
+    p.add_argument("--sha", default=None)
+    p.add_argument("--window", type=int, default=5)
+    p.set_defaults(fn=cmd_check)
+    p = sub.add_parser("show", help="print metric trends")
+    p.add_argument("bench", nargs="?", default=None)
+    p.set_defaults(fn=cmd_show)
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

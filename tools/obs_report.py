@@ -21,6 +21,21 @@ fault/retry tallies). Also the artifact Swiss-army knife for CI:
 the machine contract from :func:`repro.obs.tracing.validate_spans`;
 the serve/chaos CI smoke jobs gate on it. ``--chrome`` converts the
 JSONL to Chrome ``trace_event`` JSON for chrome://tracing / Perfetto.
+
+ISSUE 10 views:
+
+* TTFT/TPOT p50/p99 are derived from the registry **histograms** as
+  well as from spans whenever both artifacts are given, and any
+  disagreement beyond the containing bucket's width is flagged
+  (``DISAGREE``) — the cheap cross-check that catches histogram
+  mirroring bugs.
+* ``--kernels`` — the kernel-tier table: dispatch counts
+  (``repro_kernel_dispatch_total``), attributed seconds
+  (``repro_kernel_seconds_total``) with roofline fractions
+  (``repro_kernel_roofline_frac``), and compile watchdog counts
+  (``repro_compiles_total`` + compile-seconds histogram).
+* ``--bench-trend [BENCH]`` — metric trends from the committed
+  ``benchmarks/history/*.jsonl`` (tools/bench_history.py records).
 """
 from __future__ import annotations
 
@@ -133,7 +148,154 @@ def load_metrics(path: str) -> dict:
     return out
 
 
+def load_histograms(path: str) -> dict:
+    """Parse histogram structure out of a metrics dump:
+    ``{name: [(labels, buckets, cum_counts, sum, count)]}`` with
+    ``buckets`` the finite ``le`` edges and ``cum_counts`` cumulative
+    (Prometheus semantics), total in ``count``."""
+    text = pathlib.Path(path).read_text()
+    out: dict = {}
+    if path.endswith(".json"):
+        data = json.loads(text).get("metrics", {})
+        for name, m in data.items():
+            if m.get("kind") != "histogram":
+                continue
+            for s in m.get("series", []):
+                out.setdefault(name, []).append(
+                    (s.get("labels", {}), list(s["buckets"]),
+                     list(s["counts"]), float(s.get("sum", 0.0)),
+                     int(s.get("count", 0))))
+        return out
+    # prometheus text: group _bucket/_sum/_count by (name, labels\le)
+    acc: dict = {}
+    for labels_name, rows in load_metrics(path).items():
+        for suffix in ("_bucket", "_sum", "_count"):
+            if labels_name.endswith(suffix):
+                base = labels_name[: -len(suffix)]
+                for labels, val in rows:
+                    key_labels = {k: v for k, v in labels.items()
+                                  if k != "le"}
+                    key = (base, tuple(sorted(key_labels.items())))
+                    rec = acc.setdefault(
+                        key, {"labels": key_labels, "edges": [],
+                              "sum": 0.0, "count": 0})
+                    if suffix == "_bucket":
+                        le = labels.get("le", "+Inf")
+                        if le != "+Inf":
+                            rec["edges"].append((float(le), val))
+                    elif suffix == "_sum":
+                        rec["sum"] = val
+                    else:
+                        rec["count"] = int(val)
+                break
+    for (base, _), rec in acc.items():
+        edges = sorted(rec["edges"])
+        out.setdefault(base, []).append(
+            (rec["labels"], [e for e, _ in edges],
+             [int(c) for _, c in edges], rec["sum"], rec["count"]))
+    return out
+
+
+def hist_quantile(buckets, cum_counts, count, q):
+    """Quantile from cumulative bucket counts: linear interpolation
+    inside the containing bucket. Returns ``(value, lo, hi)`` where
+    [lo, hi) is the containing bucket (hi = inf for the overflow
+    bucket — observations above every edge). NaNs when empty."""
+    nan = float("nan")
+    if count <= 0 or not buckets:
+        return nan, nan, nan
+    target = q / 100.0 * count
+    prev_edge, prev_cum = 0.0, 0
+    for edge, cum in zip(buckets, cum_counts):
+        if cum >= target:
+            frac = ((target - prev_cum) / (cum - prev_cum)
+                    if cum > prev_cum else 1.0)
+            return prev_edge + frac * (edge - prev_edge), prev_edge, edge
+        prev_edge, prev_cum = edge, cum
+    return buckets[-1], buckets[-1], float("inf")
+
+
+def compare_latency(trace_report: dict, hists: dict) -> list:
+    """Span-derived vs histogram-derived TTFT/TPOT p50/p99 (ISSUE 10
+    satellite): rows ``{"metric", "q", "span_s", "hist_s", "width_s",
+    "agree"}``. ``agree`` is False when the two differ by more than the
+    width of the histogram bucket containing the quantile — the
+    histogram cannot localise finer than its bucket, so anything within
+    one width is indistinguishable; beyond it the mirroring is broken."""
+    pairs = (("ttft", "repro_ttft_seconds"),
+             ("tpot", "repro_tpot_seconds"))
+    rows = []
+    for key, metric in pairs:
+        series = hists.get(metric)
+        xs = trace_report.get(key) or []
+        if not series or not xs:
+            continue
+        labels, buckets, cum, _sum, count = series[0]
+        for q in (50, 99):
+            hv, lo, hi = hist_quantile(buckets, cum, count, q)
+            sv = _pct(xs, q)
+            width = (hi - lo) if hi != float("inf") else float("inf")
+            agree = not (abs(sv - hv) > width) \
+                if sv == sv and hv == hv else True
+            rows.append({"metric": key, "q": q, "span_s": sv,
+                         "hist_s": hv, "width_s": width, "agree": agree})
+    return rows
+
+
+def print_kernel_report(metrics_path, out=print) -> None:
+    """The ``--kernels`` view: dispatch counts, attributed seconds with
+    roofline fractions, and compile watchdog counts."""
+    m = load_metrics(metrics_path)
+    hists = load_histograms(metrics_path)
+
+    def rows_of(name):
+        return m.get(name, [])
+
+    out("kernel tier:")
+    disp = rows_of("repro_kernel_dispatch_total")
+    if disp:
+        out("  dispatches (kernel, source -> count):")
+        for labels, val in sorted(disp, key=lambda r: (
+                r[0].get("kernel", ""), r[0].get("source", ""))):
+            out(f"    {labels.get('kernel', '?'):16s} "
+                f"{labels.get('source', '?'):10s} {val:g}")
+    secs = rows_of("repro_kernel_seconds_total")
+    fracs = {r[0].get("kernel"): r[1]
+             for r in rows_of("repro_kernel_roofline_frac")}
+    if secs:
+        total = sum(v for _, v in secs) or 1.0
+        out("  attributed seconds (kernel: seconds, share, roofline "
+            "fraction):")
+        for labels, val in sorted(secs, key=lambda r: -r[1]):
+            k = labels.get("kernel", "?")
+            rf = fracs.get(k)
+            rf_s = f"{rf:.4f}" if rf is not None else "-"
+            out(f"    {k:16s} {val:9.4f}s  {val / total:6.1%}  rf={rf_s}")
+    comp = rows_of("repro_compiles_total")
+    if comp:
+        out("  compiles (fn -> traces):")
+        for labels, val in sorted(comp, key=lambda r: r[0].get("fn", "")):
+            out(f"    {labels.get('fn', '?'):32s} {val:g}")
+    ch = hists.get("repro_compile_seconds")
+    if ch:
+        tot_s = sum(s for _, _, _, s, _ in ch)
+        tot_n = sum(n for _, _, _, _, n in ch)
+        out(f"  compile wall: {tot_n} timed traces, {tot_s:.3f}s total")
+    if not (disp or secs or comp):
+        out("  (no kernel-tier series in this dump)")
+
+
+def print_bench_trend(bench=None, out=print) -> None:
+    """The ``--bench-trend`` view — delegates to tools/bench_history.py
+    (same directory) so the trend math lives in one place."""
+    sys.path.insert(0, str(ROOT / "tools"))
+    import bench_history
+    args = argparse.Namespace(bench=bench, history_dir=None)
+    bench_history.cmd_show(args)
+
+
 def print_report(trace_path=None, metrics_path=None, out=print):
+    r = None
     if trace_path:
         events = tracing.load_jsonl(trace_path)
         r = report_trace(events)
@@ -157,6 +319,32 @@ def print_report(trace_path=None, metrics_path=None, out=print):
                                       sorted(labels.items())) + "}"
                        if labels else "")
                 out(f"  {name}{lbl} = {val:g}")
+        # histogram-derived latency + span cross-check (ISSUE 10)
+        hists = load_histograms(metrics_path)
+        for metric, label in (("repro_ttft_seconds", "TTFT"),
+                              ("repro_tpot_seconds", "TPOT")):
+            series = hists.get(metric)
+            if not series:
+                continue
+            _, buckets, cum, _s, count = series[0]
+            p50, _, _ = hist_quantile(buckets, cum, count, 50)
+            p99, _, _ = hist_quantile(buckets, cum, count, 99)
+            out(f"  {label} (histogram): n={count} "
+                f"p50={_fmt_s(p50)} p99={_fmt_s(p99)}")
+        if r is not None:
+            disagreements = 0
+            for row in compare_latency(r, hists):
+                mark = "ok" if row["agree"] else "DISAGREE"
+                if not row["agree"]:
+                    disagreements += 1
+                out(f"  {row['metric']} p{row['q']}: "
+                    f"span={_fmt_s(row['span_s'])} "
+                    f"hist={_fmt_s(row['hist_s'])} "
+                    f"(bucket width {_fmt_s(row['width_s'])}) {mark}")
+            if disagreements:
+                out(f"  WARNING: {disagreements} span-vs-histogram "
+                    "disagreement(s) beyond one bucket width — check "
+                    "metric mirroring")
 
 
 def main(argv=None) -> int:
@@ -172,9 +360,24 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="validate span completeness only; exit 1 on any "
                          "violation (CI smoke gate)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="print the kernel-tier table (dispatch counts, "
+                         "attributed seconds + roofline fractions, "
+                         "compile watchdog) from --metrics")
+    ap.add_argument("--bench-trend", nargs="?", const="", default=None,
+                    metavar="BENCH",
+                    help="print benchmarks/history trends (optionally "
+                         "one bench name)")
     args = ap.parse_args(argv)
+    if args.bench_trend is not None:
+        print_bench_trend(args.bench_trend or None)
+        if not args.trace and not args.metrics:
+            return 0
     if not args.trace and not args.metrics:
-        ap.error("nothing to do: pass --trace and/or --metrics")
+        ap.error("nothing to do: pass --trace and/or --metrics "
+                 "(or --bench-trend)")
+    if args.kernels and not args.metrics:
+        ap.error("--kernels needs --metrics")
     if (args.chrome or args.check) and not args.trace:
         ap.error("--chrome/--check need --trace")
     if args.check:
@@ -192,6 +395,8 @@ def main(argv=None) -> int:
             print(f"[obs-report] chrome trace: {args.chrome}")
         return 0
     print_report(args.trace, args.metrics)
+    if args.kernels:
+        print_kernel_report(args.metrics)
     if args.chrome:
         tracing.write_chrome(tracing.load_jsonl(args.trace), args.chrome)
         print(f"[obs-report] chrome trace: {args.chrome}")
